@@ -1,0 +1,12 @@
+"""Fig 3.11: global memory bandwidth, measured vs theoretical."""
+from repro.core import hwmodel
+
+def run():
+    rows = []
+    for name in ("V100", "P100", "P4", "M60", "K80"):
+        s = hwmodel.GPUS[name]
+        ratio = s.gmem_measured_gibs / s.gmem_theoretical_gibs
+        rows.append((name, f"{s.gmem_bus};theoretical="
+                     f"{s.gmem_theoretical_gibs:.0f};measured="
+                     f"{s.gmem_measured_gibs:.0f};ratio={ratio:.1%}"))
+    return rows

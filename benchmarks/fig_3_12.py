@@ -1,0 +1,10 @@
+"""Fig 3.12: TLB sweep -> page entry sizes and coverages."""
+from repro.core import dissect, hwmodel
+
+def run():
+    tlbs = dissect.dissect_tlbs(hwmodel.V100)
+    MiB = 1024 * 1024
+    return (f"L1TLB:page={tlbs[0].page_entry//MiB}MiB(2),"
+            f"coverage={tlbs[0].coverage//MiB}MiB(32);"
+            f"L2TLB:page={tlbs[1].page_entry//MiB}MiB(32),"
+            f"coverage={tlbs[1].coverage//MiB}MiB(8192)")

@@ -1,0 +1,14 @@
+"""Fig 3.2: fine-grained p-chase latency classes (28/193/375/1029)."""
+import numpy as np
+from repro.core import hwmodel, pchase, simulator
+
+def run():
+    hier = simulator.build_hierarchy(hwmodel.V100)
+    c = pchase.latency_classes(hier, span=64 * 1024)
+    hier.flush()
+    lat = hier.scan(np.arange(0, 512, 8))
+    # One latency per 32B line start: cold, L2-hit, dram, L2-hit, ...
+    starts = [int(lat[i]) for i in (0, 4, 8, 12, 16, 20)]
+    return (f"l1_hit={c.l1_hit}(28);l2_hit={c.l2_hit}(193);"
+            f"dram={c.dram}(375);cold={c.cold}(1029);"
+            f"line_start_pattern={starts}")

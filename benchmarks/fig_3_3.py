@@ -1,0 +1,47 @@
+"""Figs 3.3-3.5: instruction-cache hierarchy via inverse-throughput plateaus.
+
+Simulates an FFMA stream of growing footprint through the modeled
+L0(12KiB)/L1(128KiB)/L2 icache hierarchy and detects the plateau ends, the
+paper's methodology for discovering icache sizes."""
+import numpy as np
+from repro.core.simulator import SetAssocCache
+
+KiB = 1024
+INSTR_BYTES = 16    # 128-bit Volta words
+
+def _avg_cycles(footprint, l0, l1, l2):
+    for c in (l0, l1, l2):
+        c.flush()
+    n = footprint // INSTR_BYTES
+    addrs = (np.arange(n) * INSTR_BYTES)
+    total = 0
+    for rep in range(2):
+        cyc = 0
+        for a in addrs:
+            a = int(a)
+            if l0.access(a):
+                cyc += 2            # NVCC's 2-cycle stall cadence (paper 3.3)
+            elif l1.access(a):
+                cyc += 5
+            elif l2.access(a):
+                cyc += 20
+            else:
+                cyc += 100
+        total = cyc                  # keep second (warm) pass
+    return total / n
+
+def run():
+    l0 = SetAssocCache(12 * KiB, 256, sets=16)    # 3-way (paper fig 3.4)
+    l1 = SetAssocCache(128 * KiB, 512, sets=32)   # 8-way
+    l2 = SetAssocCache(1024 * KiB, 512)           # stand-in for 6 MiB L2
+    sizes = [2, 4, 8, 10, 12, 16, 24, 32, 64, 96, 128, 160, 192, 256, 384]
+    curve = [(s, _avg_cycles(s * KiB, l0, l1, l2)) for s in sizes]
+    # Plateau ends where inverse throughput jumps between tested sizes.
+    jumps = [curve[i][0] for i in range(len(curve) - 1)
+             if curve[i + 1][1] > curve[i][1] + 0.08]
+    l0_end = jumps[0] if jumps else sizes[-1]
+    l1_end = jumps[1] if len(jumps) > 1 else sizes[-1]
+    c = dict(curve)
+    return (f"L0_plateau_end={l0_end}KiB(12);L1_plateau_end={l1_end}KiB(128);"
+            f"inverse_throughput@2K={c[2]:.2f}cyc"
+            f"@16K={c[16]:.2f}@192K={c[192]:.2f}")

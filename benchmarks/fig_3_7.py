@@ -1,0 +1,13 @@
+"""Figs 3.6-3.7: constant-cache broadcast vs diverging accesses."""
+from repro.core import hwmodel, simulator
+
+def run():
+    v = hwmodel.V100
+    rows = []
+    for level, paper in (("l1", 27), ("l1.5", 89), ("l2", 245)):
+        lat1 = simulator.constant_latency(v, level, 1)
+        lat8 = simulator.constant_latency(v, level, 8)
+        rows.append((level.replace(".", "_"),
+                     f"broadcast={lat1:.0f}cyc(paper ~{paper});"
+                     f"diverge8={lat8:.0f}cyc;serialization=8x"))
+    return rows

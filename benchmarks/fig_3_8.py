@@ -1,0 +1,11 @@
+"""Fig 3.8: register-bank conflict sweep FFMA R6, R97, R99, RX."""
+from repro.core import hwmodel, regbank
+
+def run():
+    rf = hwmodel.V100.regfile
+    probe3 = lambda srcs: regbank.ffma_probe(rf, srcs)
+    lat = regbank.conflict_sweep(probe3, (97, 99), range(8, 24))
+    pattern = "".join("C" if l > min(lat) else "." for l in lat)
+    banks, width = regbank.dissect_register_banks(probe3, probe3)
+    return (f"rx8..23={pattern};dissected={banks}banks x{width}bit"
+            f"(paper 2x64)")

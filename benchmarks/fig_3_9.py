@@ -1,0 +1,17 @@
+"""Figs 3.9-3.10: shared memory latency under contention + bandwidth."""
+from repro.core import hwmodel, simulator
+
+def run():
+    rows = []
+    for name in ("V100", "P100", "M60", "K80"):
+        s = hwmodel.GPUS[name]
+        curve = {k: simulator.smem_latency(s, k) for k in (1, 2, 4, 32)}
+        rows.append((name, f"lat@1={curve[1]:.0f};lat@2={curve[2]:.0f};"
+                     f"lat@32={curve[32]:.0f}"))
+    v = hwmodel.V100
+    theo = v.sms * v.smem_banks * v.smem_bank_width * v.max_clock_mhz * 1e6 / 2**30
+    rows.append(("V100_bandwidth",
+                 f"theoretical={theo:.0f}GiB/s(paper 13800);"
+                 f"measured={v.smem_measured_gibs}GiB/s;"
+                 f"ratio={v.smem_measured_gibs/theo:.2f}"))
+    return rows

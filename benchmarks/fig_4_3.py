@@ -1,0 +1,16 @@
+"""§4.3 / Figs 4.2-4.7: HMMA fragment maps + 4-set/4-step emulation."""
+import numpy as np
+from repro.core import tensorcore as tc
+
+def run():
+    rng = np.random.RandomState(0)
+    a = rng.randint(-3, 4, (16, 16)).astype(np.float16)
+    b = rng.randint(-3, 4, (16, 16)).astype(np.float16)
+    c = np.zeros((16, 16), np.float32)
+    exact = np.array_equal(tc.emulate_mma_sync(a, b, c),
+                           a.astype(np.float32) @ b.astype(np.float32))
+    la = set(tc.loads_per_thread("A").tolist())
+    return (f"emulation_exact={exact};loads/thread A={la}(paper 16);"
+            f"A(0,0)->{tc.a_fragment_threads(0,0)};"
+            f"B(0,4)->{tc.b_fragment_threads(0,4)};"
+            f"C(15,15)->t{tc.c_fragment_thread(15,15)}")

@@ -1,0 +1,15 @@
+"""Fig 4.8 / Table 5.3: floating-point throughput vs peak."""
+from repro.core import hwmodel
+
+def run():
+    f = 1380e6
+    peak_half_tc = 80 * 8 * 64 * 2 * f / 1e12     # tensor cores
+    peak_single = 80 * 64 * 2 * f / 1e12
+    peak_double = 80 * 32 * 2 * f / 1e12
+    meas = {"half": 83.03, "single": 14.03, "double": 7.07}  # table 5.3 PCIe
+    rows = []
+    for prec, peak in (("half", peak_half_tc), ("single", peak_single),
+                       ("double", peak_double)):
+        rows.append((prec, f"measured={meas[prec]}TF;peak={peak:.1f}TF;"
+                     f"frac={meas[prec]/peak:.1%}"))
+    return rows

@@ -1,0 +1,35 @@
+"""Render the §Roofline markdown table from the dry-run artifact.
+
+  PYTHONPATH=src python -m benchmarks.render_roofline [artifact.json]
+"""
+
+import json
+import sys
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else \
+        "benchmarks/artifacts/dryrun_baseline.json"
+    cells = json.load(open(path))
+    print("| arch | shape | mesh | compute_s | memory_s | collective_s |"
+          " dominant | MODEL/HLO | frac | temp GiB |")
+    print("|" + "---|" * 10)
+    for c in cells:
+        if c["skipped"]:
+            print(f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — |"
+                  f" skipped | — | — | — |")
+            continue
+        if not c["ok"]:
+            print(f"| {c['arch']} | {c['shape']} | {c['mesh']} | FAILED |")
+            continue
+        r = c["roofline"]
+        temp = (c["memory"] or {}).get("temp_bytes", 0) / 2 ** 30
+        print(f"| {c['arch']} | {c['shape']} | {c['mesh']} |"
+              f" {r['compute_s']:.3g} | {r['memory_s']:.3g} |"
+              f" {r['collective_s']:.3g} | {r['dominant']} |"
+              f" {r['flops_efficiency']:.2f} |"
+              f" {r['roofline_fraction']:.3f} | {temp:.1f} |")
+
+
+if __name__ == "__main__":
+    main()

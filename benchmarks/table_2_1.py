@@ -1,0 +1,13 @@
+"""Table 2.1: warp-pair FFMA throughput vs processing-block placement."""
+import numpy as np
+from repro.core import scheduler
+
+def run():
+    model = scheduler.table_2_1()
+    errs = [abs(model[k] - v) / v for k, v in scheduler.PAPER_TABLE_2_1.items()]
+    same = model[(0, 4)]
+    diff = model[(1, 4)]
+    return (f"same_block={same:.2f}GF(paper 42.27);"
+            f"diff_block={diff:.2f}GF(paper 66.05);"
+            f"mean_err={np.mean(errs):.1%};min_threads="
+            f"{scheduler.min_threads_to_saturate()}")

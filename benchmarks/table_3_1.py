@@ -1,0 +1,16 @@
+"""Table 3.1: full memory-hierarchy dissection of all five GPUs."""
+from repro.core import dissect, hwmodel
+
+def run():
+    rows = []
+    for name in ("V100", "P100", "P4", "M60", "K80"):
+        rep = dissect.dissect(hwmodel.GPUS[name])
+        ok = sum(rep.matches.values())
+        n = len(rep.matches)
+        rows.append((name,
+                     f"matches={ok}/{n};L1={rep.l1.size//1024}KiB/"
+                     f"line{rep.l1.line}/{rep.l1.policy};"
+                     f"L2={rep.l2.size//1024}KiB/line{rep.l2.line}/"
+                     f"{rep.l2.ways}w;banks={rep.reg_banks}x"
+                     f"{rep.reg_bank_width}b"))
+    return rows

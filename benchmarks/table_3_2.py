@@ -1,0 +1,12 @@
+"""Table 3.2: L1 load throughput per SM (measured vs theoretical)."""
+from repro.core import hwmodel
+
+def run():
+    rows = []
+    for name in ("V100", "P100", "P4", "M60"):
+        s = hwmodel.GPUS[name]
+        if s.l1_bw_bytes_per_cycle:
+            rows.append((name, f"measured={s.l1_bw_bytes_per_cycle}B/cyc;"
+                         f"upper={s.l1_bw_upper_bytes_per_cycle}B/cyc;"
+                         f"ratio={s.l1_bw_bytes_per_cycle/s.l1_bw_upper_bytes_per_cycle:.2f}"))
+    return rows

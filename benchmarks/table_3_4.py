@@ -1,0 +1,12 @@
+"""Table 3.4: L2 load throughput across GPU generations."""
+from repro.core import hwmodel
+
+def run():
+    rows = []
+    for name in ("V100", "P100", "P4", "M60", "K80"):
+        s = hwmodel.GPUS[name]
+        if s.l2_bw_gbs:
+            rows.append((name, f"l2_bw={s.l2_bw_gbs}GB/s"))
+    v, p = hwmodel.V100.l2_bw_gbs, hwmodel.P100.l2_bw_gbs
+    rows.append(("volta_vs_pascal", f"speedup={v/p:.2f}x"))
+    return rows

@@ -1,0 +1,22 @@
+"""Table 4.1: dependent-issue latencies, measured by the control-word
+stall-shrinking method, plus host-CPU dependent-chain wall clocks."""
+from repro.core import hwmodel, latency
+
+def run():
+    rows = []
+    for arch, table in (("volta", hwmodel.VOLTA_INSTR_LATENCY),
+                        ("pascal", hwmodel.PASCAL_INSTR_LATENCY)):
+        board = latency.Scoreboard(table)
+        ok = sum(latency.measure_fixed_latency(board, op, 100) == lat
+                 for op, lat in table.items() if lat > 1)
+        n = sum(1 for lat in table.values() if lat > 1)
+        key = {op: table[op] for op in ("FFMA", "DFMA") if op in table}
+        rows.append((arch, f"recovered={ok}/{n};key={key}"))
+    import jax.numpy as jnp
+    x = jnp.zeros((8,), jnp.float32)
+    suite = latency.standard_op_suite()
+    host = {name: latency.measure_op_chain(fn, x, n=256, repeats=2)
+            for name, fn in list(suite.items())[:3]}
+    rows.append(("host_cpu_ns", ";".join(f"{k}={v:.0f}" for k, v in
+                                         host.items())))
+    return rows

@@ -1,0 +1,18 @@
+"""Table 4.2 / Fig 4.1: atomic latency and throughput under contention."""
+from repro.core import atomics, hwmodel
+
+def run():
+    rows = []
+    for name in ("V100", "P100", "K80"):
+        s = hwmodel.GPUS[name]
+        res = atomics.model_residuals(s, "shared")
+        pub1, mod1 = res[1]
+        pub32, mod32 = res[32]
+        rows.append((name, f"shared@1:pub={pub1:.0f}/model={mod1:.0f};"
+                     f"@32:pub={pub32:.0f}/model={mod32:.0f}"))
+    v = hwmodel.V100
+    s4 = atomics.throughput_scenario(v, 4)
+    s3 = atomics.throughput_scenario(v, 3)
+    rows.append(("V100_fig4_1", f"scenario4/scenario3={s4/s3:.0f}x"
+                 "(no-contention scaling wins, paper's conclusion)"))
+    return rows

@@ -1,0 +1,14 @@
+"""Ch.5: interconnect p2p bandwidth/latency (NVLink/PCIe) + ICI model."""
+from repro.core import hwmodel, interconnect
+
+def run():
+    rows = []
+    for name, (bw, lat) in interconnect.link_comparison().items():
+        rows.append((name.replace("-", "_"), f"unidir={bw:.1f}GB/s;"
+                     f"latency={lat:.2f}us"))
+    h2d, d2h = hwmodel.HOST_BANDWIDTH_MBS["V100-PCIe"]
+    rows.append(("host_device", f"h2d={h2d}MB/s;d2h={d2h}MB/s"))
+    c = interconnect.collective_time("all_reduce", 1 << 30, 16)
+    rows.append(("ici_allreduce_1GiB_16chips",
+                 f"time={c.time_s*1e3:.2f}ms;wire={c.bytes_on_wire/2**30:.2f}GiB"))
+    return rows

@@ -1,0 +1,31 @@
+"""End-to-end roofline summary over the dry-run baseline artifact."""
+import json
+import os
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "artifacts",
+                        "dryrun_baseline.json")
+
+def run():
+    if not os.path.exists(ARTIFACT):
+        return "missing: run `python -m repro.launch.dryrun --mesh both --out benchmarks/artifacts/dryrun_baseline.json`"
+    cells = [c for c in json.load(open(ARTIFACT))
+             if c["ok"] and not c["skipped"]]
+    rows = []
+    ranked = sorted(cells, key=lambda c: -c["roofline"]["roofline_fraction"])
+    best, worst = ranked[0], ranked[-1]
+    rows.append(("cells", f"n={len(cells)};all_compiled=True"))
+    rows.append(("best", f"{best['arch']}x{best['shape']}@{best['mesh']}:"
+                 f"frac={best['roofline']['roofline_fraction']:.3f}"))
+    rows.append(("worst", f"{worst['arch']}x{worst['shape']}@{worst['mesh']}:"
+                 f"frac={worst['roofline']['roofline_fraction']:.4f}"))
+    coll = sorted(cells, key=lambda c: -c["roofline"]["collective_s"])
+    c0 = coll[0]
+    rows.append(("most_collective_bound",
+                 f"{c0['arch']}x{c0['shape']}@{c0['mesh']}:"
+                 f"coll_s={c0['roofline']['collective_s']:.3e}"))
+    dom = {}
+    for c in cells:
+        dom[c["roofline"]["dominant"]] = dom.get(c["roofline"]["dominant"], 0) + 1
+    rows.append(("dominant_census", ";".join(f"{k}={v}" for k, v in
+                                             sorted(dom.items()))))
+    return rows

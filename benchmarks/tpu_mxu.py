@@ -1,0 +1,19 @@
+"""TPU-side MXU dissection: alignment cliffs + microbench-informed GEMM
+tiling (the Ch.1 analogue on the target hardware)."""
+from repro.core import autotune
+
+def run():
+    rows = []
+    cliffs = {d: autotune.mxu_efficiency(256, d, 256)
+              for d in (128, 129, 192, 255, 256)}
+    rows.append(("alignment_cliff",
+                 ";".join(f"k={d}:eff={e:.2f}" for d, e in cliffs.items())))
+    for m, k, n in ((8192, 4096, 4096), (1024, 1024, 151936),
+                    (65536, 896, 4864)):
+        gain = autotune.tuning_gain(autotune.GemmProblem(m=m, k=k, n=n))
+        rows.append((f"gemm_{m}x{k}x{n}",
+                     f"naive={gain['naive']['time_s']*1e3:.3f}ms;"
+                     f"tuned={gain['tuned']['time_s']*1e3:.3f}ms;"
+                     f"block={gain['tuned']['config']};"
+                     f"speedup={gain['speedup']:.2f}x"))
+    return rows

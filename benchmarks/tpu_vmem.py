@@ -1,0 +1,37 @@
+"""VMEM working-set budgets + a real p-chase of THIS host's caches — the
+paper's ch.3 method running on actual silicon available in the container."""
+import time
+import numpy as np
+from repro.core import autotune, hwmodel
+
+def _host_pchase(n_bytes, steps=200_000):
+    # Random-permutation chain at cache-line granularity defeats the
+    # prefetcher, exactly like the paper's fine-grained p-chase.
+    n = max(8, n_bytes // 64)
+    rng = np.random.RandomState(0)
+    order = rng.permutation(n)
+    chain = np.empty(n * 8, np.int64)          # one slot per 64B line
+    chain[order * 8] = np.roll(order, -1) * 8
+    pos = 0
+    t0 = time.perf_counter_ns()
+    for _ in range(steps):
+        pos = chain[pos]
+    return (time.perf_counter_ns() - t0) / steps
+
+def run():
+    rows = []
+    p = autotune.GemmProblem(m=4096, k=4096, n=4096)
+    cfg, terms = autotune.choose_gemm_block(p)
+    rows.append(("vmem_budget",
+                 f"block=({cfg.bm},{cfg.bk},{cfg.bn});"
+                 f"vmem={cfg.vmem_bytes(p)/2**20:.1f}MiB of "
+                 f"{hwmodel.DEFAULT_TPU.vmem_bytes/2**20:.0f}MiB;"
+                 f"mxu_eff={terms['mxu_efficiency']:.2f}"))
+    sizes = [16 * 2**10, 256 * 2**10, 4 * 2**20, 64 * 2**20]
+    lats = {s: _host_pchase(s, steps=60_000) for s in sizes}
+    rows.append(("host_cache_pchase_ns",
+                 ";".join(f"{s//1024}KiB={l:.1f}" for s, l in lats.items())))
+    mono = all(lats[a] <= lats[b] * 1.35
+               for a, b in zip(sizes, sizes[1:]))
+    rows.append(("host_hierarchy_visible", f"latency_grows={mono}"))
+    return rows

@@ -1,0 +1,36 @@
+"""Microbench-informed GEMM tiling: the hardware model picks BlockSpecs, the
+Pallas kernel runs them (interpret mode on CPU), outputs validated vs jnp.
+
+  PYTHONPATH=src python examples/autotune_gemm.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import autotune
+from repro.kernels import ops
+
+
+def main():
+    for m, k, n in ((512, 512, 512), (1024, 4096, 1024)):
+        p = autotune.GemmProblem(m=m, k=k, n=n)
+        gain = autotune.tuning_gain(p)
+        cfg = gain["tuned"]["config"]
+        print(f"GEMM {m}x{k}x{n}: tuned block={cfg} "
+              f"modeled speedup vs naive 128^3 = {gain['speedup']:.2f}x "
+              f"(traffic {gain['naive']['traffic_bytes']/2**20:.0f} -> "
+              f"{gain['tuned']['traffic_bytes']/2**20:.0f} MiB)")
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(256, 512), jnp.float32)
+    y = jnp.asarray(rng.randn(512, 256), jnp.float32)
+    out = ops.gemm(x, y)       # autotuned block, Pallas interpret on CPU
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ y),
+                               rtol=1e-4, atol=1e-3)
+    print("Pallas kernel with autotuned block == jnp reference: OK")
+
+
+if __name__ == "__main__":
+    main()

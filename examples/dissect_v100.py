@@ -1,0 +1,40 @@
+"""The paper, end to end: dissect the V100 device model with black-box
+probes and print the recovered Table 3.1 column + the Ch.1 optimization.
+
+  PYTHONPATH=src python examples/dissect_v100.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import dissect, hwmodel, regbank, regremap
+
+
+def main():
+    print("== dissecting V100 device model (black-box probes only) ==")
+    rep = dissect.dissect(hwmodel.V100)
+    print(f"L1: {rep.l1.size//1024} KiB, {rep.l1.line} B lines, "
+          f"{rep.l1.sets} sets, {rep.l1.policy}, {rep.l1.hit_latency} cyc")
+    print(f"L2: {rep.l2.size//1024} KiB, {rep.l2.line} B lines, "
+          f"{rep.l2.ways}-way, {rep.l2.hit_latency} cyc")
+    print(f"latency classes: {rep.latency}")
+    for i, t in enumerate(rep.tlbs, 1):
+        print(f"L{i} TLB: {t.page_entry >> 20} MiB pages, "
+              f"{t.coverage >> 20} MiB coverage")
+    print(f"register file: {rep.reg_banks} banks x {rep.reg_bank_width} bit")
+    print(f"matches vs published: {sum(rep.matches.values())}"
+          f"/{len(rep.matches)}")
+
+    print("\n== ch.1: conflict-aware register remapping ==")
+    rf = hwmodel.V100.regfile
+    nvcc = regbank.parse_listing(regbank.NVCC_LISTING)
+    ours = regremap.remap_tile(rf, regbank.A_REGS, regbank.B_REGS,
+                               list(range(16, 80)))
+    g0 = regbank.gflops_per_sm(rf, nvcc, 1380.0)
+    g1 = regbank.gflops_per_sm(rf, ours, 1380.0)
+    print(f"NVCC mapping : {g0:6.2f} GFLOPS/SM (paper measured 132.05)")
+    print(f"our remapping: {g1:6.2f} GFLOPS/SM (paper measured 152.43)")
+    print(f"modeled gain : {g1/g0-1:+.1%} (paper +15.4%)")
+
+
+if __name__ == "__main__":
+    main()

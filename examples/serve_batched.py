@@ -1,0 +1,44 @@
+"""Batched serving: continuous batching over mixed-length requests, checked
+against per-request greedy generation.
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import transformer as T
+from repro.serve.engine import (Request, ServeConfig, ServingEngine,
+                                greedy_generate)
+
+
+def main():
+    cfg = configs.get_smoke("granite-3-8b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServingEngine(params, cfg, ServeConfig(max_len=64, batch=4,
+                                                    eos_id=-1))
+    rng = np.random.RandomState(0)
+    prompts = {rid: rng.randint(2, cfg.vocab, size=rng.randint(3, 12))
+               .astype(np.int32) for rid in range(10)}
+    t0 = time.time()
+    for rid, p in prompts.items():
+        engine.submit(Request(rid=rid, prompt=p, max_new=12))
+    done = engine.run_until_drained()
+    dt = time.time() - t0
+    tokens = sum(len(v) for v in done.values())
+    print(f"{len(done)} requests, {tokens} tokens, {tokens/dt:.1f} tok/s "
+          f"(4-slot continuous batching)")
+    ref = greedy_generate(params, cfg, jnp.asarray(prompts[0])[None], 12,
+                          max_len=64)
+    assert done[0] == np.asarray(ref[0]).tolist(), "engine must match greedy"
+    print("engine output == reference greedy decode for request 0")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` returns the full published configuration;
+``get_smoke(name)`` a reduced same-family config for CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+ARCHS = [
+    "whisper_medium",
+    "qwen3_4b",
+    "qwen2_0_5b",
+    "granite_3_8b",
+    "phi3_mini_3_8b",
+    "dbrx_132b",
+    "llama4_maverick_400b",
+    "jamba_v0_1_52b",
+    "llama_3_2_vision_90b",
+    "mamba2_370m",
+]
+
+# CLI ids (--arch) use dashes, matching the assignment table.
+ALIASES = {
+    "whisper-medium": "whisper_medium",
+    "qwen3-4b": "qwen3_4b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "granite-3-8b": "granite_3_8b",
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+    "dbrx-132b": "dbrx_132b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "llama-3.2-vision-90b": "llama_3_2_vision_90b",
+    "mamba2-370m": "mamba2_370m",
+}
+
+
+def _module(name: str):
+    mod = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str):
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str):
+    return _module(name).SMOKE
+
+
+def list_archs() -> List[str]:
+    return list(ARCHS)
+
+
+def canonical_id(name: str) -> str:
+    for cli, mod in ALIASES.items():
+        if mod == ALIASES.get(name, name).replace("-", "_").replace(".", "_"):
+            return cli
+    return name

@@ -1,0 +1,11 @@
+"""phi3-mini-3.8b [dense]: 32L d_model=3072 32H (GQA kv=32) d_ff=8192
+vocab=32064 — RoPE SwiGLU MHA [arXiv:2404.14219]."""
+from repro.models.transformer import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-mini-3.8b", n_layers=32, d_model=3072, n_heads=32,
+    n_kv_heads=32, d_ff=8192, vocab=32064, compute_dtype="bfloat16")
+
+SMOKE = ModelConfig(
+    name="phi3-mini-3.8b-smoke", n_layers=2, d_model=32, n_heads=4,
+    n_kv_heads=4, d_ff=64, vocab=128, compute_dtype="float32")

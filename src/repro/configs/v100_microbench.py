@@ -1,0 +1,9 @@
+"""The paper's own 'architecture': the V100 dissection configuration.
+
+Selecting --arch v100-microbench runs the full ch.3/ch.4 dissection suite
+against the V100-configured device model instead of lowering an LM."""
+from repro.core import hwmodel
+
+GPU = hwmodel.V100
+PROBES = ("l1", "l2", "tlb", "latency_classes", "register_banks",
+          "shared_memory", "constant_cache", "table_1_1", "table_2_1")

@@ -1,0 +1,20 @@
+"""whisper-medium [audio]: enc-dec, conv frontend stubbed.
+
+24L d_model=1024 16H (kv=16) d_ff=4096 vocab=51865 [arXiv:2212.04356].
+The audio frontend (2x conv) is a stub: input_specs() supplies precomputed
+1500-frame embeddings, per the assignment."""
+from repro.models.transformer import EncoderConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium", n_layers=24, d_model=1024, n_heads=16,
+    n_kv_heads=16, d_ff=4096, vocab=51865, norm="layer", activation="gelu",
+    qkv_bias=True, rope_theta=None,
+    encoder=EncoderConfig(n_layers=24, n_ctx=1500),
+    n_frontend_tokens=1500, compute_dtype="bfloat16")
+
+SMOKE = ModelConfig(
+    name="whisper-medium-smoke", n_layers=2, d_model=32, n_heads=4,
+    n_kv_heads=4, d_ff=64, vocab=128, norm="layer", activation="gelu",
+    qkv_bias=True, rope_theta=None,
+    encoder=EncoderConfig(n_layers=2, n_ctx=12),
+    n_frontend_tokens=12, compute_dtype="float32")

@@ -1,0 +1,35 @@
+"""Core library: the paper's contribution as composable modules.
+
+Dissection (faithful methodology, device-model backend):
+  ``simulator``  — cycle-level memory-hierarchy device model
+  ``pchase``     — pointer-chase geometry inference (Mei & Chu / paper ch.3)
+  ``regbank``    — register bank conflicts + reuse caches + Table 1.1
+  ``regremap``   — the Ch.1 conflict-free remapping, as an algorithm
+  ``scheduler``  — warp-to-processing-block mapping model (Table 2.1)
+  ``tensorcore`` — HMMA fragment maps + emulation (Figs 4.2-4.7)
+  ``latency``    — instruction latency measurement method (Table 4.1)
+  ``atomics``    — contention models (Table 4.2 / Fig 4.1)
+  ``isa``        — encoding facts + control-word codec (ch.2 + appendix)
+  ``dissect``    — full-device orchestration (Table 3.1 reproduction)
+
+TPU transfer (the production framework's brain):
+  ``hwmodel``      — GPU specs (ground truth) + TPU v5e target constants
+  ``hlo_analysis`` — compiled-HLO dissection (collective bytes, op census)
+  ``roofline``     — three-term roofline engine
+  ``interconnect`` — alpha-beta ICI/NVLink models
+  ``collectives``  — mesh collective microbenchmarks
+  ``autotune``     — microbench-informed BlockSpec + sharding selection
+
+Keep this package import-light: jax-importing modules (``collectives``,
+``latency`` harness) are imported lazily by their users.
+"""
+
+from repro.core import (atomics, autotune, dissect, hlo_analysis, hwmodel,
+                        interconnect, isa, pchase, regbank, regremap,
+                        roofline, scheduler, simulator, tensorcore)
+
+__all__ = [
+    "atomics", "autotune", "collectives", "dissect", "hlo_analysis",
+    "hwmodel", "interconnect", "isa", "latency", "pchase", "regbank",
+    "regremap", "roofline", "scheduler", "simulator", "tensorcore",
+]

@@ -1,0 +1,179 @@
+"""Microbenchmark-informed kernel/sharding tuning (the paper's Ch.1 thesis,
+TPU-idiomatic).
+
+The paper's demonstration is that measured microarchitectural parameters
+(register banks, reuse caches) let a human beat the compiler's schedule.
+The TPU transfer is mechanical rather than manual: the dissected hardware
+model (VMEM capacity, MXU tile, HBM/ICI bandwidths — the quantities probed
+by ``benchmarks/tpu_*.py``) drives an analytical search over Pallas
+BlockSpec shapes and over sharding layouts.
+
+The GEMM cost model uses the classic blocked-matmul traffic formula: with
+C-stationary accumulation and (bm, bk, bn) tiles, A is streamed N/bn times,
+B M/bm times and C once, so tile choice trades VMEM footprint against HBM
+traffic — exactly the working-set-vs-capacity trade the paper's ch.3
+geometry tables exist to inform.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Optional, Tuple
+
+from repro.core import hwmodel
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmProblem:
+    m: int
+    k: int
+    n: int
+    in_bytes: int = 2          # bf16
+    acc_bytes: int = 4         # fp32 accumulator
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmConfig:
+    bm: int
+    bk: int
+    bn: int
+
+    def vmem_bytes(self, p: GemmProblem) -> int:
+        # Double-buffered input tiles + resident fp32 accumulator tile.
+        return (2 * (self.bm * self.bk + self.bk * self.bn) * p.in_bytes
+                + self.bm * self.bn * p.acc_bytes)
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def mxu_efficiency(dim_m: int, dim_k: int, dim_n: int,
+                   tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU) -> float:
+    """Fraction of MXU work that is useful for a (m,k,n) matmul tile — the
+    padding-cliff law that ``benchmarks/tpu_mxu.py`` dissects: each dim pads
+    to the systolic edge (lanes) or the sublane pack."""
+    d = tpu.mxu_dim
+    pad_m = _ceil_div(dim_m, 8) * 8          # sublane granularity
+    pad_k = _ceil_div(dim_k, d) * d
+    pad_n = _ceil_div(dim_n, d) * d
+    useful = dim_m * dim_k * dim_n
+    padded = pad_m * pad_k * pad_n
+    return useful / padded
+
+
+def gemm_cost(p: GemmProblem, c: GemmConfig,
+              tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU) -> Tuple[float, dict]:
+    """Modeled execution time (seconds) of the blocked GEMM, plus terms."""
+    flops = 2.0 * p.m * p.k * p.n
+    eff = mxu_efficiency(min(c.bm, p.m), min(c.bk, p.k), min(c.bn, p.n), tpu)
+    compute_s = flops / (tpu.peak_bf16_flops * eff)
+    # HBM traffic in bytes (C-stationary): A x (N/bn), B x (M/bm), C once.
+    a_reads = _ceil_div(p.n, c.bn)
+    b_reads = _ceil_div(p.m, c.bm)
+    traffic = (p.m * p.k * a_reads + p.k * p.n * b_reads) * p.in_bytes \
+        + p.m * p.n * p.in_bytes
+    memory_s = traffic / tpu.hbm_bandwidth
+    t = max(compute_s, memory_s)
+    return t, {"compute_s": compute_s, "memory_s": memory_s,
+               "traffic_bytes": traffic, "mxu_efficiency": eff}
+
+
+def candidate_blocks(p: GemmProblem,
+                     tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU,
+                     vmem_fraction: float = 0.5) -> List[GemmConfig]:
+    """Hardware-aligned candidate tiles that fit the VMEM budget."""
+    budget = int(tpu.vmem_bytes * vmem_fraction)
+    dims = [128, 256, 512, 1024, 2048]
+    out = []
+    for bm in dims:
+        if bm > max(p.m, 128):
+            continue
+        for bk in dims:
+            if bk > max(p.k, 128):
+                continue
+            for bn in dims:
+                if bn > max(p.n, 128):
+                    continue
+                c = GemmConfig(bm, bk, bn)
+                if c.vmem_bytes(p) <= budget:
+                    out.append(c)
+    return out or [GemmConfig(128, 128, 128)]
+
+
+def choose_gemm_block(p: GemmProblem,
+                      tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU
+                      ) -> Tuple[GemmConfig, dict]:
+    """Pick the minimum-modeled-time tile (the autotuner's decision)."""
+    best, best_t, best_terms = None, float("inf"), None
+    for c in candidate_blocks(p, tpu):
+        t, terms = gemm_cost(p, c, tpu)
+        if t < best_t:
+            best, best_t, best_terms = c, t, terms
+    return best, dict(best_terms, time_s=best_t)
+
+
+NAIVE_BLOCK = GemmConfig(128, 128, 128)
+
+
+def tuning_gain(p: GemmProblem,
+                tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU) -> dict:
+    """Naive-vs-tuned comparison — the Ch.1 '+15.4%' analogue, reported by
+    ``benchmarks/fig_4_8.py`` and exercised e2e in examples/autotune_gemm.py."""
+    t_naive, naive_terms = gemm_cost(p, NAIVE_BLOCK, tpu)
+    cfg, terms = choose_gemm_block(p, tpu)
+    return {
+        "naive": {"config": dataclasses.astuple(NAIVE_BLOCK), **naive_terms,
+                  "time_s": t_naive},
+        "tuned": {"config": dataclasses.astuple(cfg), **terms},
+        "speedup": t_naive / terms["time_s"],
+    }
+
+
+# ----------------------------------------------------------------------------
+# Sharding selection for one weight-stationary matmul layer.
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardingChoice:
+    name: str                   # "dp", "tp_col", "tp_row", "dp+tp"
+    time_s: float
+    compute_s: float
+    collective_s: float
+
+
+def choose_layer_sharding(batch_tokens: int, d_in: int, d_out: int,
+                          data_axis: int, model_axis: int,
+                          in_bytes: int = 2,
+                          tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU
+                          ) -> List[ShardingChoice]:
+    """Rank standard layouts for out = x @ W by modeled step time.
+
+    dp: batch sharded, W replicated (grad all-reduce amortized elsewhere).
+    tp_col: W column-sharded -> output sharded, no comm until next layer.
+    tp_row: W row-sharded -> partial sums all-reduced.
+    """
+    from repro.core import interconnect
+
+    chips = data_axis * model_axis
+    flops = 2.0 * batch_tokens * d_in * d_out
+    out: List[ShardingChoice] = []
+
+    def add(name, shard_factor, coll_kind, coll_payload, axis):
+        comp = flops / (chips * tpu.peak_bf16_flops) \
+            if shard_factor == chips else flops / (shard_factor * tpu.peak_bf16_flops)
+        coll = interconnect.collective_time(coll_kind, coll_payload, axis,
+                                            tpu).time_s if coll_payload else 0.0
+        out.append(ShardingChoice(name, comp + coll, comp, coll))
+
+    tokens_local = batch_tokens / data_axis
+    # dp only: compute split over data axis, none over model.
+    add("dp", data_axis, None, 0, 1)
+    # tp_col: activations all-gathered next layer; charge the gather here.
+    add("tp_col", chips, "all_gather",
+        tokens_local * d_out * in_bytes, model_axis)
+    # tp_row: partial-sum all-reduce of the output activations.
+    add("tp_row", chips, "all_reduce",
+        tokens_local * d_out * in_bytes, model_axis)
+    out.sort(key=lambda s: s.time_s)
+    return out

@@ -1,0 +1,92 @@
+"""Collective microbenchmarks over a device mesh (paper ch.5, TPU-idiomatic).
+
+The paper measures NVLink p2p bandwidth with explicit copy benchmarks. On a
+TPU mesh the unit of communication is the collective; this harness lowers
+each collective over a real mesh (placeholder devices in the dry-run),
+extracts the *wire bytes the compiler actually scheduled* from the HLO, and
+prices them with the alpha-beta ICI model. The same machinery feeds the
+roofline engine's collective term.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hlo_analysis, hwmodel, interconnect
+
+
+@dataclasses.dataclass
+class CollectiveBench:
+    kind: str
+    payload_bytes: int
+    axis: str
+    axis_size: int
+    hlo_bytes: int              # from compiled HLO
+    modeled_bytes: float        # alpha-beta ring accounting
+    modeled_time_s: float
+    effective_gbs: float        # payload / modeled time
+
+
+def _op(kind: str, axis: str):
+    if kind == "all_reduce":
+        return lambda x: jax.lax.psum(x, axis)
+    if kind == "all_gather":
+        return lambda x: jax.lax.all_gather(x, axis, tiled=True)
+    if kind == "reduce_scatter":
+        return lambda x: jax.lax.psum_scatter(x, axis, tiled=True)
+    if kind == "all_to_all":
+        return lambda x: jax.lax.all_to_all(x, axis, split_axis=0,
+                                            concat_axis=0, tiled=True)
+    if kind == "collective_permute":
+        def permute(x):
+            n = jax.lax.axis_size(axis)
+            perm = [(i, (i + 1) % n) for i in range(n)]
+            return jax.lax.ppermute(x, axis, perm)
+        return permute
+    raise ValueError(kind)
+
+
+def bench_collective(mesh, kind: str, payload_bytes: int, axis: str,
+                     dtype=jnp.bfloat16,
+                     tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU
+                     ) -> CollectiveBench:
+    """Lower one collective over ``mesh`` and account its wire bytes."""
+    from jax.sharding import PartitionSpec as P
+    from jax import shard_map
+
+    axis_size = mesh.shape[axis]
+    itemsize = jnp.dtype(dtype).itemsize
+    n_elems = max(axis_size, payload_bytes // itemsize)
+    n_elems = (n_elems // axis_size) * axis_size
+    spec = P(axis)
+    out_spec = P(None) if kind == "all_gather" else spec
+    fn = shard_map(_op(kind, axis), mesh=mesh, in_specs=(spec,),
+                   out_specs=out_spec, check_vma=False)
+    x = jax.ShapeDtypeStruct((n_elems,), dtype)
+    lowered = jax.jit(fn).lower(x)
+    compiled = lowered.compile()
+    stats = hlo_analysis.collective_stats(compiled.as_text())
+    cost = interconnect.collective_time(kind, n_elems * itemsize, axis_size,
+                                        tpu)
+    eff = (n_elems * itemsize) / cost.time_s / 1e9 if cost.time_s else 0.0
+    return CollectiveBench(kind=kind, payload_bytes=n_elems * itemsize,
+                           axis=axis, axis_size=axis_size,
+                           hlo_bytes=stats.total_bytes,
+                           modeled_bytes=cost.bytes_on_wire,
+                           modeled_time_s=cost.time_s,
+                           effective_gbs=eff)
+
+
+def bandwidth_curve(mesh, kind: str, axis: str,
+                    sizes_bytes: Optional[List[int]] = None
+                    ) -> List[CollectiveBench]:
+    """Effective bandwidth vs message size — the ch.5 Figure analogue: small
+    messages are alpha-bound (latency), large ones beta-bound (bandwidth)."""
+    sizes = sizes_bytes or [2 ** p for p in range(12, 28, 2)]
+    return [bench_collective(mesh, kind, s, axis) for s in sizes]

@@ -1,0 +1,405 @@
+"""Compiled-HLO dissection: collective bytes, op census, remat detection.
+
+This is the TPU-side "disassembly" analogue of the paper's SASS dissection:
+``lowered.as_text()`` is our nvdisasm. The roofline engine's collective term
+is *not* available from ``cost_analysis()``, so we parse the HLO text and sum
+operand bytes of every communication op, exactly as mandated by the task.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# e.g. "bf16[16,128,1024]{2,1,0}" or "f32[]"; layout suffix optional.
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# "%name = bf16[...] all-reduce(...)" — also matches tuple-shaped ops.
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+"
+    r"([a-z0-9\-]+)\(", re.M)
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of one 'dtype[dims]' shape string."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dtype, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def result_bytes(result_str: str) -> int:
+    """Bytes of an op result: a shape or a tuple of shapes."""
+    return sum(shape_bytes(m.group(0)) for m in _SHAPE_RE.finditer(result_str))
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum result sizes of every collective op in an HLO module.
+
+    Result size equals operand size for all-reduce/all-to-all/permute and is
+    the *gathered* size for all-gather (resp. pre-reduce for reduce-scatter's
+    operand); we use result bytes consistently — it upper-bounds the logical
+    payload that the alpha-beta model (``core/interconnect``) distributes
+    over the ring.
+    """
+    bytes_by: Counter = Counter()
+    count_by: Counter = Counter()
+    for m in _OP_RE.finditer(hlo_text):
+        result_str, opname = m.groups()
+        base = opname.rstrip("0123456789.")  # all-reduce-start.1 etc.
+        base = base.replace("-start", "").replace("-done", "")
+        for kind in COLLECTIVE_OPS:
+            if base == kind or base == kind + "-start":
+                if opname.endswith("-done"):
+                    continue                   # avoid double count async pairs
+                bytes_by[kind] += result_bytes(result_str)
+                count_by[kind] += 1
+                break
+    return CollectiveStats(dict(bytes_by), dict(count_by))
+
+
+def op_census(hlo_text: str) -> Dict[str, int]:
+    """Instruction census of an HLO module — the paper's opcode-frequency
+    analysis applied to our 'ISA'."""
+    census: Counter = Counter()
+    for m in _OP_RE.finditer(hlo_text):
+        census[m.group(2)] += 1
+    return dict(census)
+
+
+def fusion_count(hlo_text: str) -> int:
+    return op_census(hlo_text).get("fusion", 0)
+
+
+def dot_flops_census(hlo_text: str) -> int:
+    """Count dot/convolution ops (the MXU instructions of the module)."""
+    c = op_census(hlo_text)
+    return c.get("dot", 0) + c.get("convolution", 0)
+
+
+def collective_bytes(hlo_text: str) -> int:
+    return collective_stats(hlo_text).total_bytes
+
+
+def while_trip_counts(hlo_text: str) -> List[int]:
+    """Trip counts of while loops (layer scans) when XLA annotates them."""
+    return [int(x) for x in
+            re.findall(r'trip_count[="]+(\d+)', hlo_text)]
+
+
+# ----------------------------------------------------------------------------
+# Independent dot-level FLOP accounting (auditable, loop-aware).
+#
+# XLA's aggregate cost analysis has murky semantics on SPMD-partitioned
+# modules with nested while loops, so the roofline's compute term is derived
+# here by parsing every dot/convolution in every computation, resolving
+# operand shapes, and scaling loop bodies by their trip counts.
+# ----------------------------------------------------------------------------
+
+# Computation headers look like "%name (params...) -> type {"; parameter
+# lists may contain nested parens (tuple types), so match loosely on the
+# arrow + opening brace and the absence of an assignment.
+_COMP_HDR_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*([a-z0-9]+\[[0-9,]*\])[^\s]*\s+"
+    r"([a-z0-9\-]+)\(([^\n]*)$", re.M)
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CALL_RE = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-]+)")
+
+
+def _split_computations(hlo_text: str):
+    """Split module text into {computation_name: [lines]} blocks."""
+    comps = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR_RE.match(line)
+        if m and " = " not in line:
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _shape_dims(shape_str: str):
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class ModuleGraph:
+    """Parsed HLO module: per-computation op lines, shapes, call edges."""
+
+    def __init__(self, hlo_text: str, default_trip: int = 1):
+        self.comps = _split_computations(hlo_text)
+        self.default_trip = default_trip
+        em = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo_text)
+        self.entry = em.group(1) if em else next(iter(self.comps), None)
+        self.shapes: Dict[str, Dict[str, str]] = {}
+        self.calls: Dict[str, List[Tuple[str, str]]] = {}
+        self.param_hints: Dict[str, Dict[int, int]] = {}
+        self.root_inplace: Dict[str, Optional[int]] = {}
+        call_attr = re.compile(
+            r"(?:body|condition|to_apply|calls|branch_computations)="
+            r"\{?%?([\w.\-]+)")
+        shape_def = re.compile(
+            r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*([a-z0-9]+\[[0-9,]*\])")
+        for cname, lines in self.comps.items():
+            table = {}
+            edges = []
+            for line in lines:
+                pm = shape_def.match(line)
+                if pm:
+                    table[pm.group(1)] = pm.group(2)
+                kind = "while" if " while(" in line else "call"
+                for sub in call_attr.findall(line):
+                    edges.append((kind, sub))
+            self.shapes[cname] = table
+            self.calls[cname] = edges
+        _graph_access_hints(self)
+
+    def scaled_sum(self, per_comp: Dict[str, float],
+                   follow_calls: bool = True) -> float:
+        """Sum per-computation values over the call graph; while bodies
+        multiply by the default trip count."""
+        seen = set()
+
+        def total(cname: str) -> float:
+            if cname in seen or cname not in self.comps:
+                return 0.0
+            seen.add(cname)
+            t = per_comp.get(cname, 0.0)
+            for kind, sub in self.calls.get(cname, []):
+                if kind == "while":
+                    t += total(sub) * self.default_trip
+                elif follow_calls:
+                    t += total(sub)
+            seen.discard(cname)
+            return t
+
+        return total(self.entry) if self.entry else 0.0
+
+
+# Ops whose operands/results are not real data movement.
+_FREE_OPS = {"parameter", "tuple", "get-tuple-element", "bitcast", "constant",
+             "after-all", "partition-id", "replica-id", "iota"}
+
+_PARAM_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*[^=]*parameter\((\d+)\)")
+_DS_RE = re.compile(r"dynamic-slice\(%([\w.\-]+)[,)]")
+_DUS_RE = re.compile(r"dynamic-update-slice\(%([\w.\-]+),\s*%([\w.\-]+)[,)]")
+
+
+def _graph_access_hints(graph):
+    """Per computation: param index -> bytes actually touched, for fused
+    dynamic-(update-)slice access into big operands (stacked scan weights,
+    KV caches). Also records whether the ROOT is an in-place update."""
+    for cname, lines in graph.comps.items():
+        params = {}
+        for line in lines:
+            pm = _PARAM_RE.match(line)
+            if pm:
+                params[pm.group(1)] = int(pm.group(2))
+        hints = {}
+        root_inplace = None
+        for line in lines:
+            m = _DEF_RE.match(line)
+            sliced = _DS_RE.search(line)
+            if sliced and sliced.group(1) in params and m:
+                if m.group(3) == "dynamic-slice":
+                    hints[params[sliced.group(1)]] = shape_bytes(m.group(2))
+            dm = _DUS_RE.search(line)
+            if dm and dm.group(1) in params:
+                upd = graph.shapes[cname].get(dm.group(2), "")
+                hints[params[dm.group(1)]] = shape_bytes(upd)
+                if "ROOT" in line:
+                    root_inplace = shape_bytes(upd)
+        graph.param_hints[cname] = hints
+        graph.root_inplace[cname] = root_inplace
+
+
+def _dot_flops_line(line: str, shape_table: Dict[str, str]) -> float:
+    m = _DEF_RE.match(line)
+    if not m or m.group(3) != "dot":
+        return 0.0
+    _, result_shape, _, rest = m.groups()
+    out_elems = 1
+    for d in _shape_dims(result_shape):
+        out_elems *= d
+    k = 1
+    cm = _CONTRACT_RE.search(line)
+    ops = _OPERAND_RE.findall(rest.split(")")[0])
+    if cm and ops:
+        lhs_dims = _shape_dims(shape_table.get(ops[0], ""))
+        for ci in (int(x) for x in cm.group(1).split(",") if x):
+            if ci < len(lhs_dims):
+                k *= lhs_dims[ci]
+    return 2.0 * out_elems * k
+
+
+def _op_bytes_line(line: str, shape_table: Dict[str, str]) -> float:
+    m = _DEF_RE.match(line)
+    if not m:
+        return 0.0
+    _, result_shape, op, rest = m.groups()
+    if op in _FREE_OPS:
+        return 0.0
+    total = float(shape_bytes(result_shape))
+    for name in _OPERAND_RE.findall(rest.split(")")[0]):
+        total += shape_bytes(shape_table.get(name, ""))
+    return total
+
+
+def _collective_bytes_line(line: str) -> float:
+    m = _OP_RE.match(line)
+    if not m:
+        return 0.0
+    result_str, opname = m.groups()
+    base = opname.rstrip("0123456789.")
+    base = base.replace("-start", "").replace("-done", "")
+    if base in COLLECTIVE_OPS and not opname.endswith("-done"):
+        return float(result_bytes(result_str))
+    return 0.0
+
+
+def _per_comp(graph: ModuleGraph, line_fn) -> Dict[str, float]:
+    return {cname: sum(line_fn(l, graph.shapes[cname]) for l in lines)
+            for cname, lines in graph.comps.items()}
+
+
+def _comp_bytes(graph: ModuleGraph, cname: str) -> float:
+    """Post-fusion bytes of one computation, slice-access aware."""
+    total = 0.0
+    shape_table = graph.shapes[cname]
+    call_attr = re.compile(r"calls=\{?%?([\w.\-]+)")
+    for line in graph.comps[cname]:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        _, result_shape, op, rest = m.groups()
+        if op in _FREE_OPS:
+            continue
+        if op == "dynamic-slice":
+            total += 2.0 * shape_bytes(result_shape)
+            continue
+        if op == "dynamic-update-slice":
+            dm = _DUS_RE.search(line)
+            upd = shape_bytes(shape_table.get(dm.group(2), "")) if dm else 0
+            total += 2.0 * upd
+            continue
+        callee = None
+        cm = call_attr.search(line)
+        if cm:
+            callee = cm.group(1)
+        hints = graph.param_hints.get(callee, {}) if callee else {}
+        # Result: in-place-update fusions write only the update bytes.
+        inplace = graph.root_inplace.get(callee) if callee else None
+        total += float(inplace if inplace is not None
+                       else result_bytes(result_shape))
+        for i, opnd in enumerate(_OPERAND_RE.findall(rest.split(")")[0])):
+            b = float(shape_bytes(shape_table.get(opnd, "")))
+            if i in hints:
+                b = min(b, float(hints[i]))
+            total += b
+    return total
+
+
+def parsed_flops(hlo_text: str, default_trip: int = 1) -> float:
+    """Total dot FLOPs: per-computation dot flops resolved from operand
+    shapes, with while-loop bodies multiplied by ``default_trip`` (XLA does
+    not annotate CPU trip counts; callers pass the scan length). This is the
+    auditable compute source for the roofline — XLA's aggregate
+    ``cost_analysis`` has inconsistent loop semantics on partitioned
+    modules (see EXPERIMENTS.md §Roofline notes)."""
+    graph = ModuleGraph(hlo_text, default_trip)
+    return graph.scaled_sum(_per_comp(graph, _dot_flops_line))
+
+
+def parsed_bytes(hlo_text: str, default_trip: int = 1) -> float:
+    """HLO bytes-accessed: operands + results of every top-level op (post
+    fusion: a fusion op counts only its external inputs/outputs), loop
+    bodies scaled by trip count. Dynamic-(update-)slice access — including
+    fused slices of stacked scan weights and KV caches — is charged at the
+    touched-slice size, matching in-place TPU semantics. Fusion internals
+    are excluded: this is the fused-traffic model for the roofline memory
+    term."""
+    graph = ModuleGraph(hlo_text, default_trip)
+    per = {cname: _comp_bytes(graph, cname) for cname in graph.comps}
+    return graph.scaled_sum(per, follow_calls=False)
+
+
+def parsed_collective_bytes(hlo_text: str, default_trip: int = 1) -> float:
+    """Collective payload bytes with correct loop scaling (collectives
+    inside a layer scan fire once per trip)."""
+    graph = ModuleGraph(hlo_text, default_trip)
+    return graph.scaled_sum(
+        _per_comp(graph, lambda l, _t: _collective_bytes_line(l)))
+
+
+def cost_analysis_terms(compiled) -> Dict[str, float]:
+    """Extract flops/bytes from a compiled executable's cost analysis."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    # 'bytes accessed' totals all operand+output traffic.
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    if bytes_accessed == 0.0:
+        bytes_accessed = sum(v for k, v in ca.items()
+                             if k.startswith("bytes accessed"))
+    transcendentals = float(ca.get("transcendentals", 0.0))
+    return {"flops": flops, "bytes": bytes_accessed,
+            "transcendentals": transcendentals}
+
+
+def memory_analysis_bytes(compiled) -> Optional[Dict[str, float]]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    if ma is None:
+        return None
+    return {
+        "argument_bytes": float(getattr(ma, "argument_size_in_bytes", 0)),
+        "output_bytes": float(getattr(ma, "output_size_in_bytes", 0)),
+        "temp_bytes": float(getattr(ma, "temp_size_in_bytes", 0)),
+        "alias_bytes": float(getattr(ma, "alias_size_in_bytes", 0)),
+        "code_bytes": float(getattr(ma, "generated_code_size_in_bytes", 0)),
+    }

@@ -1,0 +1,91 @@
+"""Interconnect models — paper ch. 5 (NVLink/PCIe) adapted to TPU ICI/DCN.
+
+The paper benchmarks peer-to-peer bandwidth/latency across link generations.
+The TPU-idiomatic equivalent is the alpha-beta cost model of ICI collectives
+that the roofline engine's third term consumes, plus per-collective byte
+accounting from compiled HLO (``core/hlo_analysis.py``).
+
+alpha-beta model: time(bytes) = alpha (hops x per-hop latency) + bytes / beta.
+Ring algorithms on an ICI torus move 2*(n-1)/n of the payload per participating
+link; we expose per-collective effective-byte factors used consistently by
+the roofline engine and the collective microbenchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro.core import hwmodel
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveCost:
+    bytes_on_wire: float       # per chip, per direction
+    time_s: float
+    alpha_s: float
+    beta_s: float
+
+
+def _ring_factor(kind: str, n: int) -> float:
+    """Payload multiplier per chip for ring algorithms over n participants."""
+    if n <= 1:
+        return 0.0
+    if kind == "all_reduce":
+        return 2.0 * (n - 1) / n          # reduce-scatter + all-gather
+    if kind in ("all_gather", "reduce_scatter"):
+        return (n - 1) / n
+    if kind == "all_to_all":
+        return (n - 1) / n
+    if kind == "collective_permute":
+        return 1.0
+    raise ValueError(kind)
+
+
+def collective_time(kind: str, payload_bytes: float, axis_size: int,
+                    tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU,
+                    links: Optional[int] = None,
+                    inter_pod: bool = False) -> CollectiveCost:
+    """alpha-beta time of one collective over a mesh axis.
+
+    ``payload_bytes`` is the full logical tensor size. ``links`` is how many
+    ICI links serve this axis (a 2D-mesh axis gets 2 of the 4)."""
+    links = links or (tpu.ici_links_per_chip // 2)
+    beta = (tpu.dcn_bandwidth if inter_pod
+            else tpu.ici_link_bandwidth * links)
+    n = max(axis_size, 1)
+    factor = _ring_factor(kind, axis_size)
+    # Per-chip wire bytes for ring algorithms over the logical payload:
+    #   all-gather / reduce-scatter: P (n-1)/n     all-reduce: 2 P (n-1)/n
+    #   all-to-all: P (n-1)/n^2                    permute: P/n (one shard)
+    if kind == "all_to_all":
+        per_chip = payload_bytes * factor / n
+    elif kind == "collective_permute":
+        per_chip = payload_bytes / n
+    else:
+        per_chip = payload_bytes * factor
+    hops = axis_size - 1 if axis_size > 1 else 0
+    alpha = hops * tpu.ici_latency_us * 1e-6
+    t = alpha + per_chip / beta
+    return CollectiveCost(bytes_on_wire=per_chip, time_s=t,
+                          alpha_s=alpha, beta_s=per_chip / beta)
+
+
+def link_comparison() -> Dict[str, Tuple[float, float]]:
+    """Paper Table 5.1 rows + the TPU ICI link for context:
+    name -> (unidirectional GB/s, latency us)."""
+    out = {name: (l.unidir_gbs, l.latency_us)
+           for name, l in hwmodel.LINKS.items()}
+    tpu = hwmodel.DEFAULT_TPU
+    out["TPU-ICI-link"] = (tpu.ici_link_bandwidth / 1e9, tpu.ici_latency_us)
+    return out
+
+
+def measured_vs_theoretical() -> Dict[str, float]:
+    """Measured/theoretical link efficiency (paper emphasizes 83.3% HBM2
+    efficiency on Volta vs 69.6% on Pascal; links behave similarly)."""
+    out = {}
+    for name, l in hwmodel.LINKS.items():
+        if l.theoretical_gbs:
+            out[name] = l.unidir_gbs / l.theoretical_gbs
+    return out

@@ -1,0 +1,175 @@
+"""Three-term roofline engine (the §Roofline deliverable).
+
+For every compiled (architecture x shape x mesh) cell, derive:
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+FLOPs and bytes come from ``compiled.cost_analysis()``; collective bytes
+come from parsing the HLO text (``core/hlo_analysis``). Hardware constants
+are the mandated v5e-class numbers: 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+Important accounting notes (documented in EXPERIMENTS.md §Roofline):
+
+* ``cost_analysis`` on the CPU backend reports per-*program* totals of the
+  SPMD-partitioned module, i.e. already per-device quantities; we therefore
+  do NOT divide by chip count again. We cross-check with MODEL_FLOPS/chips.
+* Layer scans (``lax.while``) report one trip's cost; we scale flops/bytes
+  by detected trip counts when XLA annotates them (``known_trip_count``).
+* The collective term assumes ring scheduling on the axis links; it is the
+  serial upper bound — overlap with compute is what the §Perf hillclimbs
+  buy back.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional
+
+from repro.core import hlo_analysis, hwmodel
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # per chip, per step
+    hlo_bytes: float            # per chip, per step
+    collective_bytes: float     # per chip, per step (wire bytes)
+    model_flops: float          # 6*N*D (or serving analogue), whole step
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Serial upper bound (no overlap)."""
+        return self.compute_s + self.memory_s + self.collective_s
+
+    @property
+    def step_time_overlapped_s(self) -> float:
+        """Perfect-overlap lower bound: the max of the three engines."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the overlapped bound: how close the
+        step is to the chip's peak given perfect overlap."""
+        if self.step_time_overlapped_s == 0:
+            return 0.0
+        useful_s = (self.model_flops / self.chips) / _TPU.peak_bf16_flops
+        return useful_s / self.step_time_overlapped_s
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization against the serial step-time bound."""
+        if self.step_time_s == 0:
+            return 0.0
+        useful_s = (self.model_flops / self.chips) / _TPU.peak_bf16_flops
+        return useful_s / self.step_time_s
+
+    @property
+    def flops_efficiency(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS — how much compiled compute is useful
+        (catches remat/redundancy waste). >1 means XLA folded work away."""
+        total_hlo = self.hlo_flops * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.update(dominant=self.dominant,
+                 step_time_s=self.step_time_s,
+                 step_time_overlapped_s=self.step_time_overlapped_s,
+                 roofline_fraction=self.roofline_fraction,
+                 mfu=self.mfu,
+                 flops_efficiency=self.flops_efficiency)
+        return d
+
+
+_TPU = hwmodel.DEFAULT_TPU
+
+
+def compute_terms(arch: str, shape: str, mesh_name: str, chips: int,
+                  hlo_flops: float, hlo_bytes: float,
+                  collective_bytes: float, model_flops: float,
+                  tpu: hwmodel.TPUSpec = _TPU,
+                  ici_links: int = 2) -> RooflineTerms:
+    """Build the three terms (seconds) from per-chip HLO quantities."""
+    t = RooflineTerms(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                      hlo_flops=hlo_flops, hlo_bytes=hlo_bytes,
+                      collective_bytes=collective_bytes,
+                      model_flops=model_flops)
+    t.compute_s = hlo_flops / tpu.peak_bf16_flops
+    t.memory_s = hlo_bytes / tpu.hbm_bandwidth
+    t.collective_s = collective_bytes / (tpu.ici_link_bandwidth * ici_links)
+    return t
+
+
+def terms_from_compiled(arch: str, shape: str, mesh_name: str, chips: int,
+                        compiled, model_flops: float,
+                        hlo_text: Optional[str] = None,
+                        scan_trips: Optional[int] = None) -> RooflineTerms:
+    """Derive roofline terms from a compiled executable.
+
+    Quantities come from the auditable HLO parser (``hlo_analysis``):
+    dot-level FLOPs, post-fusion operand/result bytes, and collective
+    payload bytes — each with while-loop bodies scaled by ``scan_trips``
+    (the layer-scan length; XLA does not annotate CPU trip counts, and its
+    aggregate ``cost_analysis`` has inconsistent loop semantics on
+    SPMD-partitioned modules, which we verified on controlled cases).
+    """
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    trips = scan_trips or 1
+    flops = hlo_analysis.parsed_flops(text, trips)
+    bytes_ = hlo_analysis.parsed_bytes(text, trips)
+    coll = hlo_analysis.parsed_collective_bytes(text, trips)
+    return compute_terms(arch, shape, mesh_name, chips, flops, bytes_, coll,
+                         model_flops)
+
+
+def format_table(rows) -> str:
+    """Markdown table for EXPERIMENTS.md §Roofline."""
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "dominant | MODEL/HLO flops | roofline frac |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for t in rows:
+        lines.append(
+            f"| {t.arch} | {t.shape} | {t.mesh} | {t.compute_s:.3e} | "
+            f"{t.memory_s:.3e} | {t.collective_s:.3e} | {t.dominant} | "
+            f"{t.flops_efficiency:.2f} | {t.roofline_fraction:.3f} |")
+    return "\n".join(lines)
+
+
+def save_rows(rows, path: str):
+    with open(path, "w") as f:
+        json.dump([t.to_dict() for t in rows], f, indent=1)
+
+
+def load_rows(path: str):
+    with open(path) as f:
+        data = json.load(f)
+    out = []
+    for d in data:
+        t = RooflineTerms(
+            arch=d["arch"], shape=d["shape"], mesh=d["mesh"],
+            chips=d["chips"], hlo_flops=d["hlo_flops"],
+            hlo_bytes=d["hlo_bytes"],
+            collective_bytes=d["collective_bytes"],
+            model_flops=d["model_flops"])
+        t.compute_s = d["compute_s"]
+        t.memory_s = d["memory_s"]
+        t.collective_s = d["collective_s"]
+        out.append(t)
+    return out

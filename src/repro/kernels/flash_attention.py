@@ -1,0 +1,105 @@
+"""Flash attention (online softmax) Pallas kernel, causal + GQA.
+
+HBM->VMEM tiling: the (block_q, head_dim) query tile stays resident while
+K/V tiles stream; running max/denominator/accumulator live in VMEM scratch
+and persist across the sequential K grid steps. GQA is handled in the K/V
+BlockSpec index maps (no materialized head repeat). Causal K-blocks past the
+diagonal are skipped via ``pl.when`` (their loads still stream; skipping the
+*loads* too is a documented future optimization — on TPU that needs a
+scalar-prefetch grid, out of scope here).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, block_q: int, block_k: int):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = True
+    if causal:
+        # Query block rows end at qi*bq + bq - 1; skip K blocks fully beyond.
+        run = ki * block_k <= qi * block_q + block_q - 1
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                  # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[0] = (acc_scr[...] / l_scr[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 256,
+                    block_k: int = 256, interpret: bool = False):
+    """q: (b, sq, h, d); k/v: (b, skv, kvh, d) -> (b, sq, h, d)."""
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    group = h // kvh
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    assert sq % block_q == 0 and skv % block_k == 0
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, skv, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, skv, d)
+
+    def kv_index(bh, qi, ki):
+        # flattened q index bh = batch*h + head -> kv row batch*kvh + head//g
+        return ((bh // h) * kvh + (bh % h) // group, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=1.0 / np.sqrt(d),
+                          causal=causal, block_q=block_q, block_k=block_k),
+        grid=(b * h, sq // block_q, skv // block_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), kv_index),
+            pl.BlockSpec((1, block_k, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d),
+                               lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

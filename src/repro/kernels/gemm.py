@@ -1,0 +1,57 @@
+"""Blocked GEMM Pallas kernel — the Ch.1 case study, TPU-idiomatic.
+
+The paper hand-schedules an 8x8 FFMA register tile to dodge bank conflicts;
+the MXU equivalent of that register tile is the (bm, bk, bn) VMEM block.
+Block shapes come from the microbench-informed autotuner
+(``core/autotune.choose_gemm_block``): MXU-aligned (multiples of 128), sized
+so double-buffered input tiles plus the fp32 accumulator fit VMEM.
+
+Grid: (M/bm, N/bn, K/bk), K innermost; the accumulator lives in VMEM scratch
+and persists across the sequential K steps (TPU grids execute in order).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(x_ref, y_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def gemm(x, y, bm: int = 256, bk: int = 512, bn: int = 256,
+         interpret: bool = False):
+    """x: (m, k) @ y: (k, n) -> (m, n). Dims must tile by the block shape."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, \
+        ((m, k, n), (bm, bk, bn))
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)

@@ -1,0 +1,64 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On the CPU container the kernels execute in interpret mode (the kernel body
+runs in Python for correctness validation); on a TPU backend they compile
+natively. Block shapes default to the microbench-informed autotuner's
+choices (``core/autotune``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autotune
+from repro.kernels import flash_attention as _flash
+from repro.kernels import gemm as _gemm
+from repro.kernels import pchase_probe as _pchase
+from repro.kernels import ssd_scan as _ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def gemm(x, y, block=None):
+    if block is None:
+        p = autotune.GemmProblem(m=x.shape[0], k=x.shape[1], n=y.shape[1],
+                                 in_bytes=x.dtype.itemsize)
+        cfg, _ = autotune.choose_gemm_block(p)
+        bm = min(cfg.bm, x.shape[0])
+        bk = min(cfg.bk, x.shape[1])
+        bn = min(cfg.bn, y.shape[1])
+    else:
+        bm, bk, bn = block
+    # Fall back to aligned divisors when shapes don't tile.
+    bm = _largest_divisor(x.shape[0], bm)
+    bk = _largest_divisor(x.shape[1], bk)
+    bn = _largest_divisor(y.shape[1], bn)
+    return _gemm.gemm(x, y, bm=bm, bk=bk, bn=bn, interpret=_interpret())
+
+
+def _largest_divisor(dim: int, upper: int) -> int:
+    for c in range(min(upper, dim), 0, -1):
+        if dim % c == 0:
+            return c
+    return dim
+
+
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 256,
+                    block_k: int = 256):
+    block_q = _largest_divisor(q.shape[1], block_q)
+    block_k = _largest_divisor(k.shape[1], block_k)
+    return _flash.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k, interpret=_interpret())
+
+
+def ssd_scan(x, a_log, b, c, chunk: int = 128):
+    chunk = _largest_divisor(x.shape[1], chunk)
+    return _ssd.ssd_scan(x, a_log, b, c, chunk=chunk,
+                         interpret=_interpret())
+
+
+def pchase(chain, steps: int):
+    return _pchase.pchase(chain, steps, interpret=_interpret())

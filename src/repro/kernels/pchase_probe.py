@@ -1,0 +1,43 @@
+"""Pointer-chase probe as a Pallas kernel — the paper's ch.3 measurement
+primitive expressed on the TPU.
+
+On a real TPU this kernel issues a serially dependent gather chain through
+VMEM/HBM (deployable as a latency probe with hardware timers); in this
+container it runs in interpret mode and is validated against the numpy
+chase. It is also the access-pattern generator for the device-model
+dissection (same chains, same semantics).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _chase_kernel(chain_ref, o_ref, *, steps: int):
+    def body(i, pos):
+        o_ref[i] = pos
+        return chain_ref[pos]
+
+    final = jax.lax.fori_loop(0, steps, body, jnp.int32(0))
+    o_ref[steps - 1] = o_ref[steps - 1]  # keep shape users honest
+    del final
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "interpret"))
+def pchase(chain, steps: int, interpret: bool = False):
+    """Follow ``chain`` (int32 next-index array) for ``steps`` dependent
+    loads; returns the visited positions."""
+    n = chain.shape[0]
+    return pl.pallas_call(
+        functools.partial(_chase_kernel, steps=steps),
+        grid=(),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)
+                  if hasattr(pl, "ANY") else pl.BlockSpec((n,), lambda: (0,))],
+        out_specs=pl.BlockSpec((steps,), lambda: (0,)),
+        out_shape=jax.ShapeDtypeStruct((steps,), jnp.int32),
+        interpret=interpret,
+    )(chain.astype(jnp.int32))

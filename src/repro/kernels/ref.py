@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def gemm(x, y):
+    return jnp.dot(x, y, preferred_element_type=x.dtype)
+
+
+def flash_attention(q, k, v, causal: bool = True):
+    """Exact softmax attention with GQA broadcast, fp32 softmax."""
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    group = h // kvh
+    qg = q.reshape(b, sq, kvh, group, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf) / np.sqrt(d)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def ssd_scan(x, a_log, b, c):
+    """Sequential SSD recurrence (same as models.mamba.ssd_reference)."""
+    from repro.models.mamba import ssd_reference
+
+    y, h = ssd_reference(x.astype(jnp.float32), a_log.astype(jnp.float32),
+                         b.astype(jnp.float32), c.astype(jnp.float32))
+    return y.astype(x.dtype), h
+
+
+def pchase(chain: np.ndarray, steps: int) -> np.ndarray:
+    out = np.empty(steps, dtype=np.int32)
+    pos = 0
+    for i in range(steps):
+        out[i] = pos
+        pos = int(chain[pos])
+    return out

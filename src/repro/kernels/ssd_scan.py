@@ -1,0 +1,103 @@
+"""Chunked SSD (Mamba-2) Pallas kernel.
+
+Grid: (batch*heads, n_chunks) with the chunk axis innermost/sequential; the
+(head_dim, d_state) SSM state lives in VMEM scratch and carries across chunk
+steps — the TPU-native expression of the inter-chunk recurrence. Per chunk:
+the intra-chunk decay-masked attention-like product (three small MXU
+matmuls) plus the state update, all fp32 in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, state_scr, *,
+                chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)               # (q, p)
+    a = a_ref[0].astype(jnp.float32)               # (q,) log-decay
+    bm = b_ref[0].astype(jnp.float32)              # (q, n)
+    cm = c_ref[0].astype(jnp.float32)              # (q, n)
+
+    a_cum = jnp.cumsum(a)                          # (q,)
+    # Intra-chunk decay[l, s] = exp(sum_{s<m<=l} a_m) = exp(cum[l] - cum[s]).
+    seg = a_cum[:, None] - a_cum[None, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(cols <= rows, jnp.exp(seg), 0.0)
+
+    scores = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32) * decay
+    y = jnp.dot(scores, x, preferred_element_type=jnp.float32)   # (q, p)
+
+    # Contribution of the carried state: y += (C * exp(a_cum)) @ state^T.
+    state = state_scr[...]                         # (p, n)
+    c_decay = cm * jnp.exp(a_cum)[:, None]
+    y += jnp.dot(c_decay, state.T, preferred_element_type=jnp.float32)
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # State update: state = exp(A_chunk) * state + sum_l exp(a_cum[-1]-a_cum[l]) x_l b_l^T
+    decay_states = jnp.exp(a_cum[-1] - a_cum)      # (q,)
+    new_contrib = jnp.dot((x * decay_states[:, None]).T, bm,
+                          preferred_element_type=jnp.float32)    # (p, n)
+    state_scr[...] = state * jnp.exp(a_cum[-1]) + new_contrib
+
+    @pl.when(ci == pl.num_programs(1) - 1)
+    def _emit_state():
+        hout_ref[0] = state_scr[...].astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, a_log, b, c, chunk: int = 128, interpret: bool = False):
+    """Chunked SSD scan.
+
+    x: (bt, l, h, p) dt-scaled inputs; a_log: (bt, l, h) log decays;
+    b, c: (bt, l, n). Returns (y: (bt, l, h, p), state: (bt, h, p, n)).
+    """
+    bt, l, h, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, l)
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    xf = x.transpose(0, 2, 1, 3).reshape(bt * h, l, p)
+    af = a_log.transpose(0, 2, 1).reshape(bt * h, l)
+    # b/c are shared across heads; index-map them per flattened row.
+
+    def bc_index(bh, ci):
+        return (bh // h, ci, 0)
+
+    y, hout = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(bt * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, chunk, n), bc_index),
+            pl.BlockSpec((1, chunk, n), bc_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, p, n), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bt * h, l, p), x.dtype),
+            jax.ShapeDtypeStruct((bt * h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xf, af, b, c)
+    y = y.reshape(bt, h, l, p).transpose(0, 2, 1, 3)
+    hout = hout.reshape(bt, h, p, n)
+    return y, hout

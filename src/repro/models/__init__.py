@@ -1,0 +1,1 @@
+"""Model zoo substrate: pure-JAX layers, transformer stacks, MoE, SSM."""

@@ -1,0 +1,339 @@
+"""Core neural layers, pure JAX (pytree params, explicit init/apply).
+
+Conventions:
+  * Params are nested dicts of jnp arrays; leaf names drive sharding rules
+    (``dist/sharding._LEAF_NAMES``).
+  * Attention weights stay 3D — (embed, heads, head_dim) — so the sharding
+    divisibility fallback sees true head counts.
+  * ``sharding.shard(x, *names)`` annotates activations; it is a no-op
+    outside a mesh context.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import sharding
+
+Params = Dict[str, Any]
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+# ----------------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params: Params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(dtype)
+
+
+def layernorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(params: Params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return out.astype(dtype)
+
+
+def norm_init(kind: str, d: int) -> Params:
+    return rmsnorm_init(d) if kind == "rms" else layernorm_init(d)
+
+
+def norm(kind: str, params: Params, x):
+    return rmsnorm(params, x) if kind == "rms" else layernorm(params, x)
+
+
+# ----------------------------------------------------------------------------
+# Rotary position embeddings
+# ----------------------------------------------------------------------------
+
+def rope(x, positions, theta: float = 10000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, half)
+    cos = jnp.cos(angles)[..., None, :]      # (..., s, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Attention (GQA, optional qk-norm / qkv-bias / cross-attention / KV cache)
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: Optional[float] = 10000.0     # None -> no RoPE (whisper)
+    causal: bool = True
+    expand_kv: bool = False    # broadcast KV to q heads pre-score (sharding)
+    probs_fp32: bool = True    # fp32 score/prob tensors (faithful default)
+
+
+def attention_init(key, cfg: AttnConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": _init(ks[0], (d, h, hd)),
+        "wk": _init(ks[1], (d, kvh, hd)),
+        "wv": _init(ks[2], (d, kvh, hd)),
+        "wo": _init(ks[3], (h, hd, d), scale=1.0 / np.sqrt(h * hd)),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((h, hd), jnp.float32)
+        p["b_k"] = jnp.zeros((kvh, hd), jnp.float32)
+        p["b_v"] = jnp.zeros((kvh, hd), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd)
+        p["k_norm"] = rmsnorm_init(hd)
+    return p
+
+
+def _project_qkv(params: Params, cfg: AttnConfig, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["b_q"].astype(x.dtype)
+        k = k + params["b_k"].astype(x.dtype)
+        v = v + params["b_v"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    if cfg.rope_theta:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = sharding.shard(q, "batch", "seq", "heads", "head_dim")
+    k = sharding.shard(k, "batch", "seq", "kv_heads", "head_dim")
+    v = sharding.shard(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def sdpa(q, k, v, mask=None, kv_lengths=None, expand_kv: bool = False,
+         probs_fp32: bool = True):
+    """Scaled dot-product attention with GQA head broadcasting.
+
+    q: (b, sq, h, d); k/v: (b, skv, kvh, d). ``mask`` is an additive mask
+    broadcastable to (b, h, sq, skv); ``kv_lengths`` (b,) masks a KV cache.
+
+    ``expand_kv``: broadcast K/V to the full query-head count before the
+    score einsum. The grouped (kvh, group) reshape makes GSPMD shard the
+    attention over *kv* heads — which replicates the whole computation when
+    kv_heads doesn't divide the model axis (e.g. 8 kv heads on a 16-way
+    axis). Expanding keeps the sharded q-head axis intact at the price of a
+    kv-head broadcast (a §Perf hillclimb; see EXPERIMENTS.md).
+    """
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    group = h // kvh
+    if expand_kv and group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+        k = sharding.shard(k, "batch", None, "heads", "head_dim")
+        v = sharding.shard(v, "batch", None, "heads", "head_dim")
+        kvh, group = h, 1
+    qg = q.reshape(b, sq, kvh, group, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) / np.sqrt(d)
+    scores = scores.astype(jnp.float32 if probs_fp32 else q.dtype)
+    if mask is not None:
+        mask = mask.astype(scores.dtype)   # keep bf16 chains bf16
+        scores = scores + mask[:, None, None] if mask.ndim == 3 else scores + mask
+    if kv_lengths is not None:
+        skv = k.shape[1]
+        valid = jnp.arange(skv)[None, :] < kv_lengths[:, None]   # (b, skv)
+        scores = jnp.where(valid[:, None, None, None, :], scores,
+                           jnp.asarray(-1e30, scores.dtype))
+    # Max-subtraction in fp32 for stability even when probs stay bf16.
+    m = jnp.max(scores.astype(jnp.float32), axis=-1, keepdims=True)
+    p = jnp.exp(scores - m.astype(scores.dtype))
+    probs = (p / jnp.sum(p, axis=-1, keepdims=True)).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, h, d)
+
+
+def causal_mask(sq: int, skv: Optional[int] = None, offset: int = 0):
+    """Additive causal mask (sq, skv); query i attends keys <= i + offset."""
+    skv = skv or sq
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(skv)[None, :]
+    return jnp.where(kj <= qi, 0.0, -1e30).astype(jnp.float32)
+
+
+def attention_apply(params: Params, cfg: AttnConfig, x, positions=None,
+                    cache: Optional[Params] = None,
+                    use_flash: bool = False) -> Tuple[Any, Optional[Params]]:
+    """Self-attention; with ``cache`` runs one-step (or chunked) decoding.
+
+    cache = {"k": (b, max_len, kvh, hd), "v": ..., "index": ()} — functional
+    update, returns the new cache.
+    """
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+        if cache is not None:
+            idx = cache["index"]
+            positions = positions + (idx[:, None] if idx.ndim == 1 else idx)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    if cache is not None:
+        idx = cache["index"]
+        if idx.ndim == 1:
+            # Per-slot positions (continuous batching): scatter rows.
+            rows = jnp.arange(b)[:, None]
+            cols = idx[:, None] + jnp.arange(s)[None, :]
+            ck = cache["k"].at[rows, cols].set(k.astype(cache["k"].dtype))
+            cv = cache["v"].at[rows, cols].set(v.astype(cache["v"].dtype))
+            lengths = idx + s
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+            lengths = jnp.full((b,), idx + s)
+        ck = sharding.shard(ck, "batch", "cache_seq", "kv_heads", "head_dim")
+        cv = sharding.shard(cv, "batch", "cache_seq", "kv_heads", "head_dim")
+        new_cache = {"k": ck, "v": cv, "index": idx + s}
+        if cfg.causal:
+            # Chunked prefill must stay causal *within* the chunk: query
+            # idx+i may only see cache positions <= idx+i.
+            skv = ck.shape[1]
+            qi = jnp.arange(s)[None, :, None]
+            kj = jnp.arange(skv)[None, None, :]
+            off = idx[:, None, None] if idx.ndim == 1 else idx
+            mask = jnp.where(kj <= off + qi, 0.0, -1e30).astype(jnp.float32)
+            out = sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), mask=mask,
+                       expand_kv=cfg.expand_kv, probs_fp32=cfg.probs_fp32)
+        else:
+            out = sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                       kv_lengths=lengths, expand_kv=cfg.expand_kv,
+                       probs_fp32=cfg.probs_fp32)
+    else:
+        new_cache = None
+        if use_flash:
+            from repro.kernels import ops as kernel_ops
+            out = kernel_ops.flash_attention(q, k, v, causal=cfg.causal)
+        else:
+            mask = causal_mask(s) if cfg.causal else None
+            out = sdpa(q, k, v, mask=mask, expand_kv=cfg.expand_kv,
+                       probs_fp32=cfg.probs_fp32)
+    out = sharding.shard(out, "batch", "seq", "heads", "head_dim")
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return sharding.shard(y, "batch", "seq", "embed"), new_cache
+
+
+def cross_attention_init(key, cfg: AttnConfig) -> Params:
+    p = attention_init(key, cfg)
+    p["gate"] = jnp.zeros((), jnp.float32)      # tanh-gated (llama-vision)
+    return p
+
+
+def cross_attention_apply(params: Params, cfg: AttnConfig, x, kv_src):
+    """Cross-attention: queries from x, keys/values from ``kv_src``."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, params["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    out = sdpa(q, k, v, mask=None)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    if "gate" in params:
+        y = jnp.tanh(params["gate"]).astype(x.dtype) * y
+    return sharding.shard(y, "batch", "seq", "embed")
+
+
+# ----------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    d_model: int
+    d_ff: int
+    activation: str = "swiglu"        # "swiglu" | "gelu"
+
+
+def mlp_init(key, cfg: MLPConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.activation == "swiglu":
+        return {"w_gate": _init(ks[0], (d, f)),
+                "w_up": _init(ks[1], (d, f)),
+                "w_down": _init(ks[2], (f, d), scale=1.0 / np.sqrt(f))}
+    return {"w_up": _init(ks[0], (d, f)),
+            "b_up": jnp.zeros((f,), jnp.float32),
+            "w_down": _init(ks[1], (f, d), scale=1.0 / np.sqrt(f))}
+
+
+def mlp_apply(params: Params, cfg: MLPConfig, x):
+    if cfg.activation == "swiglu":
+        g = x @ params["w_gate"].astype(x.dtype)
+        u = x @ params["w_up"].astype(x.dtype)
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(x @ params["w_up"].astype(x.dtype)
+                        + params["b_up"].astype(x.dtype))
+    h = sharding.shard(h, "batch", "seq", "mlp")
+    y = h @ params["w_down"].astype(x.dtype)
+    return sharding.shard(y, "batch", "seq", "embed")
+
+
+# ----------------------------------------------------------------------------
+# Embeddings / unembedding
+# ----------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d: int) -> Params:
+    return {"embedding": _init(key, (vocab, d), scale=1.0)}
+
+
+def embed(params: Params, tokens, dtype=jnp.float32):
+    out = jnp.take(params["embedding"].astype(dtype), tokens, axis=0)
+    return sharding.shard(out, "batch", "seq", "embed")
+
+
+def unembed_init(key, d: int, vocab: int) -> Params:
+    return {"lm_head": _init(key, (d, vocab))}
+
+
+def unembed(params: Params, x):
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return sharding.shard(logits, "batch", "seq", "vocab")
+
+
+def sinusoidal_positions(n: int, d: int):
+    pos = np.arange(n)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * dim / d)
+    out = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(out, jnp.float32)

@@ -1,0 +1,228 @@
+"""Mamba-2 (SSD — state-space duality) blocks, pure JAX.
+
+The chunked SSD algorithm follows the minimal reference of the Mamba-2 paper
+(arXiv:2405.21060, Listing 1): the sequence is split into chunks; within a
+chunk outputs are computed attention-like with a decay mask; chunk-boundary
+states are carried by an associative recurrence. ``ssd_reference`` is the
+O(L) sequential recurrence used as the correctness oracle (and as the
+single-step decode path); ``tests/test_mamba.py`` checks they agree, and the
+Pallas kernel (``kernels/ssd_scan.py``) is checked against both.
+
+Simplifications vs the full Mamba-2 block (documented in DESIGN.md): single
+B/C group (n_groups=1) and the short causal conv applies to x only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import sharding
+from repro.models import layers
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_state: int = 128          # N
+    head_dim: int = 64          # P
+    expand: int = 2
+    d_conv: int = 4
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def mamba_init(key, cfg: MambaConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    d, h, p, n = cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.d_state
+    return {
+        "w_x": layers._init(ks[0], (d, h, p)),
+        "w_z": layers._init(ks[1], (d, h, p)),
+        "w_B": layers._init(ks[2], (d, n)),
+        "w_C": layers._init(ks[3], (d, n)),
+        "w_dt": layers._init(ks[4], (d, h)),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "conv_w": layers._init(ks[5], (cfg.d_conv, h, p), scale=0.5),
+        "norm": layers.rmsnorm_init(h * p),
+        "w_ssm_out": layers._init(ks[6], (h, p, d), scale=1.0 / np.sqrt(h * p)),
+    }
+
+
+def _segsum(a):
+    """(..., l) -> (..., l, l): S[i, j] = sum_{j < m <= i} a[m], -inf above
+    the diagonal."""
+    l = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    s = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def ssd_chunked(x, a_log, b, c, chunk: int,
+                h0: Optional[Any] = None) -> Tuple[Any, Any]:
+    """Chunked SSD.
+
+    x: (bt, l, h, p) inputs (already dt-scaled)
+    a_log: (bt, l, h) per-step log decay (dt * A, negative)
+    b, c: (bt, l, n) input/output projections (single group)
+    Returns (y: (bt, l, h, p), final_state: (bt, h, p, n)).
+    """
+    bt, l, h, p = x.shape
+    n = b.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    xc = x.reshape(bt, nc, chunk, h, p)
+    ac = a_log.reshape(bt, nc, chunk, h).transpose(0, 3, 1, 2)  # (bt,h,nc,q)
+    bc = b.reshape(bt, nc, chunk, n)
+    cc = c.reshape(bt, nc, chunk, n)
+
+    a_cum = jnp.cumsum(ac, axis=-1)                             # (bt,h,nc,q)
+
+    # 1. Intra-chunk (diagonal blocks): attention-like with decay mask.
+    decay = jnp.exp(_segsum(ac))                                # (bt,h,nc,q,q)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        cc, bc, decay, xc)
+
+    # 2. Per-chunk final states.
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)             # (bt,h,nc,q)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", bc, decay_states, xc)
+
+    # 3. Inter-chunk recurrence over chunk states.
+    chunk_decay = jnp.exp(a_cum[..., -1])                       # (bt,h,nc)
+    if h0 is None:
+        h0 = jnp.zeros((bt, h, p, n), x.dtype)
+
+    def step(carry, inp):
+        s, g = inp                                              # (bt,h,p,n), (bt,h)
+        new = carry * g[..., None, None] + s
+        return new, carry                                       # emit previous
+
+    states_t = states.transpose(1, 0, 2, 3, 4)                  # (nc,bt,h,p,n)
+    gs = chunk_decay.transpose(2, 0, 1)                         # (nc,bt,h)
+    final, prev_states = jax.lax.scan(step, h0, (states_t, gs))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)          # (bt,nc,h,p,n)
+
+    # 4. State -> output within each chunk.
+    state_decay = jnp.exp(a_cum)                                # (bt,h,nc,q)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(bt, l, h, p)
+    return y, final
+
+
+def ssd_reference(x, a_log, b, c, h0=None):
+    """O(L) sequential recurrence — the oracle."""
+    bt, l, h, p = x.shape
+    n = b.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bt, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        xt, at, bt_, ct = inp
+        state = state * jnp.exp(at)[..., None, None] + \
+            jnp.einsum("bhp,bn->bhpn", xt, bt_)
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    xs = (x.transpose(1, 0, 2, 3), a_log.transpose(1, 0, 2),
+          b.transpose(1, 0, 2), c.transpose(1, 0, 2))
+    final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3), final
+
+
+# Mamba decode cache: plain dict pytree {"conv": (b, d_conv-1, h, p),
+# "ssm": (b, h, p, n), "index": ()} so layer stacks scan over it.
+MambaCache = Dict[str, Any]
+
+
+def _causal_conv(x, w, cache_conv=None):
+    """Depthwise causal conv along seq. x: (b,l,h,p), w: (k,h,p)."""
+    k = w.shape[0]
+    if cache_conv is None:
+        pad = jnp.zeros((x.shape[0], k - 1) + x.shape[2:], x.dtype)
+    else:
+        pad = cache_conv.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(k))
+    new_cache = xp[:, -(k - 1):] if k > 1 else None
+    return jax.nn.silu(out), new_cache
+
+
+def mamba_apply(params: Params, cfg: MambaConfig, x,
+                cache: Optional[MambaCache] = None,
+                use_kernel: bool = False) -> Tuple[Any, Optional[MambaCache]]:
+    """Mamba-2 mixer. x: (b, l, d_model) -> (b, l, d_model)."""
+    b_, l, _ = x.shape
+    h, p, n = cfg.n_heads, cfg.head_dim, cfg.d_state
+    xin = jnp.einsum("bld,dhp->blhp", x, params["w_x"].astype(x.dtype))
+    z = jnp.einsum("bld,dhp->blhp", x, params["w_z"].astype(x.dtype))
+    bmat = x @ params["w_B"].astype(x.dtype)                    # (b,l,n)
+    cmat = x @ params["w_C"].astype(x.dtype)
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", x, params["w_dt"].astype(x.dtype))
+        + params["dt_bias"].astype(x.dtype))                    # (b,l,h)
+    a = -jnp.exp(params["A_log"]).astype(jnp.float32)           # (h,)
+    xin = sharding.shard(xin, "batch", "seq", "ssm_heads", None)
+
+    conv_cache = cache["conv"] if cache is not None else None
+    xin, new_conv = _causal_conv(xin, params["conv_w"], conv_cache)
+
+    a_log = dt.astype(jnp.float32) * a                          # (b,l,h)
+    x_scaled = xin * dt[..., None].astype(xin.dtype)
+    h0 = cache["ssm"] if cache is not None else None
+
+    if cache is not None and l == 1:
+        # Single-step decode: exact recurrence.
+        y, hn = ssd_reference(x_scaled.astype(jnp.float32), a_log,
+                              bmat.astype(jnp.float32),
+                              cmat.astype(jnp.float32),
+                              h0=h0)
+        y = y.astype(x.dtype)
+    elif use_kernel:
+        from repro.kernels import ops as kernel_ops
+        y, hn = kernel_ops.ssd_scan(x_scaled, a_log, bmat, cmat,
+                                    chunk=cfg.chunk)
+    else:
+        chunk = min(cfg.chunk, l)
+        while l % chunk:
+            chunk //= 2
+        y, hn = ssd_chunked(x_scaled.astype(jnp.float32), a_log,
+                            bmat.astype(jnp.float32),
+                            cmat.astype(jnp.float32), chunk,
+                            h0=h0.astype(jnp.float32) if h0 is not None else None)
+        y = y.astype(x.dtype)
+
+    y = y + xin * params["D"].astype(x.dtype)[None, None, :, None]
+    y = y * jax.nn.silu(z)
+    y = layers.rmsnorm(params["norm"], y.reshape(b_, l, h * p))
+    out = jnp.einsum("blhp,hpd->bld", y.reshape(b_, l, h, p),
+                     params["w_ssm_out"].astype(x.dtype))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssm": hn.astype(cache["ssm"].dtype),
+                     "index": cache["index"] + l}
+    return sharding.shard(out, "batch", "seq", "embed"), new_cache
+
+
+def init_cache(cfg: MambaConfig, batch: int, dtype=jnp.float32) -> MambaCache:
+    h, p, n = cfg.n_heads, cfg.head_dim, cfg.d_state
+    return {"conv": jnp.zeros((batch, cfg.d_conv - 1, h, p), dtype),
+            "ssm": jnp.zeros((batch, h, p, n), dtype),
+            "index": jnp.zeros((), jnp.int32)}

@@ -1,0 +1,156 @@
+"""Mixture-of-Experts layers: token-choice top-k routing.
+
+Two execution paths with identical math (tested against each other):
+
+* ``dense_mask`` — loop over experts masking tokens. Simple and exact;
+  compute scales with n_experts, so it is the small-config/reference path.
+
+* ``capacity`` — sort-based capacity dispatch (production path): flatten
+  (token, expert) assignments, sort by expert, take position-in-expert ranks,
+  scatter into an (experts, capacity, d) buffer, run batched expert GEMMs,
+  scatter back weighted. O(tokens * k) memory, no (T, E, C) one-hot. Under
+  SPMD the buffer's expert dim is sharded over "model" (expert parallelism);
+  GSPMD materializes the token->expert exchange as collectives, which the
+  roofline's collective term prices (hillclimb #2 targets exactly these).
+
+Includes an optional shared expert (DeepSeek/llama4 style) and an auxiliary
+load-balancing loss (Switch-style), returned for the trainer to add.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import sharding
+from repro.models import layers
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                   # per-expert hidden dim
+    n_experts: int
+    top_k: int
+    n_shared: int = 0           # shared (always-on) experts
+    capacity_factor: float = 1.25
+    impl: str = "dense_mask"    # "dense_mask" | "capacity"
+    router_dtype: Any = jnp.float32
+
+
+def moe_init(key, cfg: MoEConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": layers._init(ks[0], (d, e), scale=0.02),
+        "expert_gate": layers._init(ks[1], (e, d, f)),
+        "expert_up": layers._init(ks[2], (e, d, f)),
+        "expert_down": layers._init(ks[3], (e, f, d), scale=1.0 / np.sqrt(f)),
+    }
+    if cfg.n_shared:
+        p["shared"] = layers.mlp_init(
+            ks[4], layers.MLPConfig(d, f * cfg.n_shared, "swiglu"))
+    return p
+
+
+def _route(params: Params, cfg: MoEConfig, x):
+    """Router logits -> (weights, ids, aux_loss). x: (T, d)."""
+    logits = (x.astype(cfg.router_dtype)
+              @ params["router"].astype(cfg.router_dtype))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, cfg.top_k)          # (T, k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    # Switch-style load-balance loss: E * sum_e f_e * p_e.
+    t = x.shape[0]
+    density = jnp.zeros(cfg.n_experts).at[ids.reshape(-1)].add(1.0) / (
+        t * cfg.top_k)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = cfg.n_experts * jnp.sum(density * mean_prob)
+    return weights.astype(x.dtype), ids, aux
+
+
+def _expert_ffn(params: Params, x_e):
+    """Batched per-expert SwiGLU. x_e: (E, C, d) -> (E, C, d)."""
+    g = jnp.einsum("ecd,edf->ecf", x_e, params["expert_gate"].astype(x_e.dtype))
+    u = jnp.einsum("ecd,edf->ecf", x_e, params["expert_up"].astype(x_e.dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, params["expert_down"].astype(x_e.dtype))
+
+
+def _moe_dense_mask(params: Params, cfg: MoEConfig, x2):
+    """Reference path: every expert sees every token, masked by gate."""
+    weights, ids, aux = _route(params, cfg, x2)
+    gates = jnp.zeros((x2.shape[0], cfg.n_experts), x2.dtype)
+    gates = gates.at[jnp.arange(x2.shape[0])[:, None], ids].add(weights)
+
+    def one_expert(e, acc):
+        g = jnp.einsum("td,df->tf", x2,
+                       params["expert_gate"][e].astype(x2.dtype))
+        u = jnp.einsum("td,df->tf", x2,
+                       params["expert_up"][e].astype(x2.dtype))
+        h = jax.nn.silu(g) * u
+        y = jnp.einsum("tf,fd->td", h,
+                       params["expert_down"][e].astype(x2.dtype))
+        gate_e = jax.lax.dynamic_slice_in_dim(gates, e, 1, axis=1)
+        return acc + gate_e * y
+
+    out = jax.lax.fori_loop(0, cfg.n_experts, one_expert,
+                            jnp.zeros_like(x2))
+    return out, aux
+
+
+def _moe_capacity(params: Params, cfg: MoEConfig, x2):
+    """Production path: sort-based capacity dispatch."""
+    t, d = x2.shape
+    weights, ids, aux = _route(params, cfg, x2)
+    e, k = cfg.n_experts, cfg.top_k
+    capacity = int(np.ceil(t * k / e * cfg.capacity_factor))
+    capacity = max(capacity, 4)
+
+    flat_ids = ids.reshape(-1)                              # (T*k,)
+    flat_w = weights.reshape(-1)
+    order = jnp.argsort(flat_ids)                           # stable
+    sorted_ids = flat_ids[order]
+    # Rank within expert: index minus first occurrence of this expert.
+    first = jnp.searchsorted(sorted_ids, sorted_ids, side="left")
+    rank = jnp.arange(t * k) - first
+    keep = rank < capacity
+    dest = jnp.where(keep, sorted_ids * capacity + rank, e * capacity)
+    src_token = order // k
+
+    buf = jnp.zeros((e * capacity + 1, d), x2.dtype)
+    buf = buf.at[dest].set(x2[src_token], mode="drop")
+    x_e = buf[:-1].reshape(e, capacity, d)
+    x_e = sharding.shard(x_e, "experts", "expert_capacity", "embed")
+    y_e = _expert_ffn(params, x_e)
+    y_e = sharding.shard(y_e, "experts", "expert_capacity", "embed")
+
+    y_flat = y_e.reshape(e * capacity, d)
+    gathered = jnp.where(keep[:, None],
+                         y_flat[jnp.clip(dest, 0, e * capacity - 1)], 0.0)
+    out = jnp.zeros_like(x2)
+    out = out.at[src_token].add(gathered * flat_w[order][:, None]
+                                .astype(x2.dtype))
+    return out, aux
+
+
+def moe_apply(params: Params, cfg: MoEConfig, x) -> Tuple[Any, Any]:
+    """x: (b, s, d) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+    if cfg.impl == "capacity":
+        out, aux = _moe_capacity(params, cfg, x2)
+    else:
+        out, aux = _moe_dense_mask(params, cfg, x2)
+    if cfg.n_shared:
+        shared_cfg = layers.MLPConfig(cfg.d_model, cfg.d_ff * cfg.n_shared,
+                                      "swiglu")
+        out = out + layers.mlp_apply(params["shared"], shared_cfg,
+                                     x2[None]).reshape(b * s, d)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,  # noqa
+                               clip_by_global_norm, global_norm)
+from repro.optim.schedule import ScheduleConfig, learning_rate  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.serve.engine import (ServeConfig, ServingEngine, decode_step,  # noqa
+                                greedy_generate, make_serve_step, prefill)

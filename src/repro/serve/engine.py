@@ -1,0 +1,156 @@
+"""Serving: prefill + decode steps and a batched continuous-batching engine.
+
+``make_serve_step`` builds the jitted one-token decode step the dry-run
+lowers for the ``decode_32k`` / ``long_500k`` cells: one new token against a
+KV/SSM cache of the cell's sequence length, caches donated in-place.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int
+    batch: int
+    temperature: float = 0.0     # 0 -> greedy
+    eos_id: int = 1
+
+
+def prefill(params, cfg: T.ModelConfig, tokens, caches,
+            frontend_embeds=None):
+    """Run the prompt through the model, filling the caches."""
+    logits, caches, _ = T.forward(params, cfg, tokens, caches=caches,
+                                  frontend_embeds=frontend_embeds)
+    return logits[:, -1], caches
+
+
+def decode_step(params, cfg: T.ModelConfig, last_tokens, caches,
+                frontend_embeds=None):
+    """One decode step: (b,) token ids -> (b,) next ids + new caches."""
+    logits, caches, _ = T.forward(params, cfg, last_tokens[:, None],
+                                  caches=caches,
+                                  frontend_embeds=frontend_embeds)
+    return logits[:, -1], caches
+
+
+def make_serve_step(cfg: T.ModelConfig, donate: bool = True) -> Callable:
+    """Jitted greedy decode step (the dry-run's serve_step)."""
+
+    def step(params, last_tokens, caches, frontend_embeds=None):
+        logits, caches = decode_step(params, cfg, last_tokens, caches,
+                                     frontend_embeds=frontend_embeds)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, caches
+
+    return jax.jit(step, donate_argnums=(2,) if donate else ())
+
+
+def greedy_generate(params, cfg: T.ModelConfig, prompt, max_new: int,
+                    max_len: Optional[int] = None, frontend_embeds=None):
+    """Reference generation loop (tests compare engine output to this)."""
+    b, s = prompt.shape
+    max_len = max_len or (s + max_new)
+    caches = T.init_caches(cfg, b, max_len)
+    logits, caches = prefill(params, cfg, prompt, caches,
+                             frontend_embeds=frontend_embeds)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    step = make_serve_step(cfg, donate=False)
+    for _ in range(max_new - 1):
+        tok, caches = step(params, tok, caches,
+                           frontend_embeds=frontend_embeds)
+        out.append(tok)
+    return jnp.stack(out, axis=1)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    """Slot-based continuous batching over a fixed decode batch.
+
+    Requests join free slots as they arrive; each engine tick decodes one
+    token for every active slot. Finished slots free immediately — the
+    batched-requests serving path of deliverable (b).
+    """
+
+    def __init__(self, params, cfg: T.ModelConfig, serve_cfg: ServeConfig):
+        self.params = params
+        self.cfg = cfg
+        self.scfg = serve_cfg
+        self.caches = T.init_caches(cfg, serve_cfg.batch, serve_cfg.max_len,
+                                    per_slot_index=True)
+        self.slots: List[Optional[Request]] = [None] * serve_cfg.batch
+        self.queue: List[Request] = []
+        self.last_tok = jnp.zeros((serve_cfg.batch,), jnp.int32)
+        self.finished: Dict[int, List[int]] = {}
+        self._step = make_serve_step(cfg, donate=False)
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if slot is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                # Per-slot prefill: single-row prompt fill at slot i.
+                row = jnp.asarray(req.prompt)[None]
+                row_caches = T.init_caches(self.cfg, 1, self.scfg.max_len,
+                                           per_slot_index=True)
+                logits, row_caches = prefill(self.params, self.cfg, row,
+                                             row_caches)
+                self._write_slot(i, row_caches)
+                tok = int(np.asarray(jnp.argmax(logits, -1))[0])
+                req.generated.append(tok)
+                self.last_tok = self.last_tok.at[i].set(tok)
+
+    def _write_slot(self, i: int, row_caches):
+        # Every cache leaf is (periods, batch, ...) — including the per-slot
+        # index — so one slice-update on axis 1 installs the row.
+        def write(f, r):
+            return jax.lax.dynamic_update_slice_in_dim(
+                f, r.astype(f.dtype), i, axis=1)
+
+        self.caches = [jax.tree.map(write, f, r)
+                       for f, r in zip(self.caches, row_caches)]
+
+    def tick(self) -> int:
+        """Admit + one decode step for all active slots; returns #active."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return 0
+        nxt, self.caches = self._step(self.params, self.last_tok, self.caches)
+        nxt_host = np.asarray(nxt)
+        for i in active:
+            req = self.slots[i]
+            tok = int(nxt_host[i])
+            req.generated.append(tok)
+            if tok == self.scfg.eos_id or len(req.generated) >= req.max_new:
+                self.finished[req.rid] = req.generated
+                self.slots[i] = None
+        self.last_tok = jnp.asarray(nxt_host, jnp.int32)
+        return len(active)
+
+    def run_until_drained(self, max_ticks: int = 10000) -> Dict[int, List[int]]:
+        for _ in range(max_ticks):
+            n = self.tick()
+            if n == 0 and not self.queue:
+                break
+        return self.finished

@@ -1,0 +1,2 @@
+from repro.train.steps import TrainState, loss_fn, make_train_step  # noqa
+from repro.train.trainer import Trainer, TrainerConfig  # noqa: F401

@@ -1,0 +1,105 @@
+"""Training step: loss, grads, clipping, AdamW, optional grad accumulation
+and error-feedback gradient compression.
+
+``make_train_step`` builds the jitted step with donated state, so the
+launcher and the dry-run lower exactly what production would run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.optim import adamw, schedule
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Dict[str, Any]
+    step: Any                  # scalar int32
+
+    def tree(self):
+        return {"params": self.params, "opt": self.opt, "step": self.step}
+
+    @classmethod
+    def from_tree(cls, t):
+        return cls(params=t["params"], opt=t["opt"], step=t["step"])
+
+
+def init_state(key, cfg: T.ModelConfig) -> TrainState:
+    params = T.init_params(key, cfg)
+    return TrainState(params=params, opt=adamw.adamw_init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def cross_entropy(logits, labels):
+    """Mean token NLL, fp32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1).squeeze(-1)
+    return jnp.mean(logz - gold)
+
+
+def loss_fn(params, cfg: T.ModelConfig, batch, aux_weight: float = 0.01):
+    logits, _, aux = T.forward(params, cfg, batch["tokens"],
+                               frontend_embeds=batch.get("frontend"))
+    nll = cross_entropy(logits, batch["labels"])
+    return nll + aux_weight * aux, {"nll": nll, "aux": aux}
+
+
+def make_train_step(cfg: T.ModelConfig,
+                    sched: schedule.ScheduleConfig = schedule.ScheduleConfig(),
+                    opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+                    clip_norm: float = 1.0,
+                    accum_steps: int = 1,
+                    compress_grads: bool = False):
+    """Returns step(state_tree, batch) -> (state_tree, metrics)."""
+
+    def grads_of(params, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch)
+        return loss, parts, grads
+
+    def step(state_tree, batch):
+        state = TrainState.from_tree(state_tree)
+        if accum_steps == 1:
+            loss, parts, grads = grads_of(state.params, batch)
+        else:
+            # Microbatch accumulation over the leading batch dim.
+            def micro(i, carry):
+                acc, loss_acc = carry
+                mb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // accum_steps),
+                        x.shape[0] // accum_steps, 0), batch)
+                loss_i, _, g = grads_of(state.params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return acc, loss_acc + loss_i
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state.params)
+            grads, loss = jax.lax.fori_loop(
+                0, accum_steps, micro, (zeros, jnp.zeros((), jnp.float32)))
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+            parts = {"nll": loss, "aux": jnp.zeros((), jnp.float32)}
+        if compress_grads:
+            from repro.dist import compression
+            grads = compression.int8_roundtrip(grads)
+        grads, gnorm = adamw.clip_by_global_norm(grads, clip_norm)
+        lr = schedule.learning_rate(state.step, sched)
+        params, opt = adamw.adamw_update(grads, state.opt, state.params, lr,
+                                         opt_cfg)
+        new_state = TrainState(params=params, opt=opt, step=state.step + 1)
+        metrics = {"loss": loss, "nll": parts["nll"], "aux": parts["aux"],
+                   "grad_norm": gnorm, "lr": lr}
+        return new_state.tree(), metrics
+
+    return step

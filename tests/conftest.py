@@ -1,0 +1,12 @@
+import os
+import sys
+
+# Tests run against 1 CPU device; the 512-device dry-run sets its own flags
+# in-process (launch/dryrun.py) and is exercised here via subprocesses only.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=20, deadline=None,
+                          derandomize=True)
+settings.load_profile("ci")

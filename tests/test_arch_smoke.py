@@ -1,0 +1,104 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train step on CPU, output shapes + no NaNs (assignment requirement)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as T
+from repro.train import steps as train_steps
+
+
+def _frontend(cfg, b):
+    if cfg.n_frontend_tokens:
+        return jax.random.normal(
+            jax.random.PRNGKey(99),
+            (b, cfg.n_frontend_tokens, cfg.d_model)).astype(cfg.dtype)
+    return None
+
+
+@pytest.mark.parametrize("arch", configs.list_archs())
+def test_smoke_forward_and_train_step(arch):
+    cfg = configs.get_smoke(arch)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    fe = _frontend(cfg, b)
+    logits, _, aux = T.forward(params, cfg, tokens, frontend_embeds=fe)
+    assert logits.shape == (b, s, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits))), arch
+    assert not bool(jnp.isnan(aux)), arch
+
+    state = train_steps.init_state(jax.random.PRNGKey(2), cfg)
+    step = train_steps.make_train_step(cfg)
+    batch = {"tokens": tokens, "labels": tokens}
+    if fe is not None:
+        batch["frontend"] = fe
+    new_tree, metrics = step(state.tree(), batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert int(np.asarray(new_tree["step"])) == 1
+    # Params actually changed.
+    delta = jax.tree.map(lambda a, b_: float(jnp.abs(a - b_).max()),
+                         state.params, new_tree["params"])
+    assert max(jax.tree.leaves(delta)) > 0, arch
+
+
+@pytest.mark.parametrize("arch", configs.list_archs())
+def test_smoke_decode_step(arch):
+    cfg = configs.get_smoke(arch)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    b = 2
+    fe = _frontend(cfg, b)
+    caches = T.init_caches(cfg, b, 8)
+    tok = jnp.ones((b, 1), jnp.int32)
+    logits, caches, _ = T.forward(params, cfg, tok, frontend_embeds=fe,
+                                  caches=caches)
+    assert logits.shape == (b, 1, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits))), arch
+
+
+def test_full_configs_match_assignment_table():
+    spot = {
+        "qwen3-4b": dict(n_layers=36, d_model=2560, n_heads=32,
+                         n_kv_heads=8, d_ff=9728, vocab=151936),
+        "dbrx-132b": dict(n_layers=40, d_model=6144, n_heads=48,
+                          n_kv_heads=8, d_ff=10752, vocab=100352,
+                          n_experts=16, top_k=4),
+        "llama4-maverick-400b-a17b": dict(n_layers=48, d_model=5120,
+                                          n_heads=40, n_experts=128,
+                                          top_k=1, vocab=202048),
+        "jamba-v0.1-52b": dict(n_layers=32, d_model=4096, d_ff=14336,
+                               vocab=65536, n_experts=16, top_k=2),
+        "llama-3.2-vision-90b": dict(n_layers=100, d_model=8192, n_heads=64,
+                                     n_kv_heads=8, d_ff=28672, vocab=128256),
+        "mamba2-370m": dict(n_layers=48, d_model=1024, d_ff=0, vocab=50280,
+                            mamba_d_state=128),
+    }
+    for arch, fields in spot.items():
+        cfg = configs.get_config(arch)
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, (arch, k)
+
+
+def test_jamba_pattern_is_1_to_7():
+    cfg = configs.get_config("jamba-v0.1-52b")
+    assert len(cfg.pattern) == 8
+    assert cfg.pattern.count("attn") == 1
+    assert cfg.pattern.count("mamba") == 7
+
+
+def test_vision_pattern_cross_every_5():
+    cfg = configs.get_config("llama-3.2-vision-90b")
+    assert len(cfg.pattern) == 5 and cfg.pattern.count("cross") == 1
+
+
+def test_param_counts_near_published():
+    expect = {"qwen3-4b": (4.06e9, 0.08), "dbrx-132b": (132e9, 0.05),
+              "jamba-v0.1-52b": (52e9, 0.05),
+              "llama-3.2-vision-90b": (90e9, 0.05),
+              "mamba2-370m": (0.42e9, 0.2)}
+    for arch, (n, tol) in expect.items():
+        got = T.param_count(configs.get_config(arch))
+        assert abs(got - n) / n < tol, (arch, got)

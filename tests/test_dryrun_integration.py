@@ -1,0 +1,70 @@
+"""Integration: the 512-device dry-run lowers+compiles real cells (run in a
+subprocess so the test session keeps its single CPU device)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_dryrun(tmp_path, *args):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = tmp_path / "cells.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--out", str(out),
+         *args],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-3000:]
+    return json.loads(out.read_text()), proc.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_single_pod_cell(tmp_path):
+    cells, stdout = _run_dryrun(tmp_path, "--arch", "mamba2-370m",
+                                "--shape", "decode_32k", "--mesh", "single")
+    (cell,) = cells
+    assert cell["ok"] and not cell["skipped"]
+    assert cell["mesh"] == "data=16xmodel=16"
+    assert cell["cost"]["flops"] > 0
+    assert cell["memory"]["argument_bytes"] > 0
+    assert cell["roofline"]["dominant"] in ("compute", "memory", "collective")
+
+
+@pytest.mark.slow
+def test_dryrun_multi_pod_train_cell(tmp_path):
+    cells, _ = _run_dryrun(tmp_path, "--arch", "qwen2-0.5b",
+                           "--shape", "train_4k", "--mesh", "multi")
+    (cell,) = cells
+    assert cell["ok"]
+    assert cell["mesh"] == "pod=2xdata=16xmodel=16"
+    assert cell["collective_bytes"] > 0       # pod axis actually shards
+
+
+def test_long_500k_skip_policy(tmp_path):
+    from repro.configs import shapes
+
+    ok, why = shapes.runnable("qwen3-4b", "long_500k")
+    assert not ok and "quadratic" in why
+    for arch in shapes.SUBQUADRATIC:
+        ok, _ = shapes.runnable(arch, "long_500k")
+        assert ok
+
+
+def test_baseline_artifact_covers_all_cells():
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "artifacts", "dryrun_baseline.json")
+    if not os.path.exists(path):
+        pytest.skip("baseline sweep artifact not generated yet")
+    cells = json.load(open(path))
+    by_mesh = {}
+    for c in cells:
+        by_mesh.setdefault(c["mesh"], []).append(c)
+    assert set(by_mesh) == {"data=16xmodel=16", "pod=2xdata=16xmodel=16"}
+    for mesh, items in by_mesh.items():
+        assert len(items) == 40
+        assert all(c["ok"] for c in items)
+        assert sum(c["skipped"] for c in items) == 8   # long_500k skips

@@ -1,0 +1,119 @@
+"""HLO parsing, roofline math, autotuner and interconnect models."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import autotune, hlo_analysis, hwmodel, interconnect, roofline
+
+HLO = """
+HloModule jit_step
+ENTRY %main {
+  %p0 = bf16[16,1024]{1,0} parameter(0)
+  %ag = bf16[256,1024]{1,0} all-gather(%p0), dimensions={0}
+  %ar = f32[512,512]{1,0} all-reduce(%x), to_apply=%add
+  %rs = bf16[8,128]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = f32[64]{0} all-to-all(%z), dimensions={0}
+  %cp = bf16[32,32]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ars = f32[128,128]{1,0} all-reduce-start(%q)
+  %ard = f32[128,128]{1,0} all-reduce-done(%ars)
+  %dot = f32[128,128]{1,0} dot(%a, %b)
+  ROOT %t = (f32[128,128]{1,0}) tuple(%dot)
+}
+"""
+
+
+def test_collective_stats_parsing():
+    stats = hlo_analysis.collective_stats(HLO)
+    assert stats.bytes_by_kind["all-gather"] == 256 * 1024 * 2
+    assert stats.bytes_by_kind["all-reduce"] == 512 * 512 * 4 + 128 * 128 * 4
+    assert stats.bytes_by_kind["reduce-scatter"] == 8 * 128 * 2
+    assert stats.bytes_by_kind["all-to-all"] == 64 * 4
+    assert stats.bytes_by_kind["collective-permute"] == 32 * 32 * 2
+    assert stats.count_by_kind["all-reduce"] == 2     # incl. async start
+
+
+def test_op_census():
+    census = hlo_analysis.op_census(HLO)
+    assert census["dot"] == 1
+    assert census["all-gather"] == 1
+
+
+def test_shape_bytes():
+    assert hlo_analysis.shape_bytes("bf16[16,1024]{1,0}") == 32768
+    assert hlo_analysis.shape_bytes("f32[]") == 4
+    assert hlo_analysis.shape_bytes("pred[7]") == 7
+
+
+def test_roofline_terms_and_dominance():
+    t = roofline.compute_terms(
+        "a", "s", "m", chips=256,
+        hlo_flops=1.97e12,            # 10 ms of compute at 197 TF
+        hlo_bytes=8.19e9,             # 10 ms of HBM at 819 GB/s
+        collective_bytes=1e9,         # 10 ms at 100 GB/s (2 links)
+        model_flops=1.97e12 * 256 * 0.5)
+    assert abs(t.compute_s - 0.01) < 1e-6
+    assert abs(t.memory_s - 0.01) < 1e-6
+    assert abs(t.collective_s - 0.01) < 1e-6
+    assert t.flops_efficiency == pytest.approx(0.5)
+    assert t.roofline_fraction == pytest.approx(0.5)
+    t.memory_s *= 3
+    assert t.dominant == "memory"
+
+
+def test_roofline_json_roundtrip(tmp_path):
+    t = roofline.compute_terms("a", "s", "m", 4, 1e12, 1e9, 1e8, 5e14)
+    path = str(tmp_path / "rows.json")
+    roofline.save_rows([t], path)
+    (t2,) = roofline.load_rows(path)
+    assert t2.compute_s == t.compute_s
+    assert t2.dominant == t.dominant
+
+
+@given(m=st.sampled_from([256, 1024, 4096]),
+       k=st.sampled_from([512, 2048]),
+       n=st.sampled_from([256, 2048, 8192]))
+@settings(max_examples=15)
+def test_autotuner_respects_vmem_and_beats_naive(m, k, n):
+    p = autotune.GemmProblem(m=m, k=k, n=n)
+    cfg, terms = autotune.choose_gemm_block(p)
+    assert cfg.vmem_bytes(p) <= hwmodel.DEFAULT_TPU.vmem_bytes * 0.5
+    gain = autotune.tuning_gain(p)
+    assert gain["speedup"] >= 1.0      # tuned never loses to naive 128^3
+
+
+def test_mxu_efficiency_cliffs():
+    assert autotune.mxu_efficiency(256, 256, 256) == 1.0
+    # m pads at sublane (8) granularity; k/n pad to the 128 MXU edge.
+    assert autotune.mxu_efficiency(129, 256, 256) == pytest.approx(129 / 136)
+    assert autotune.mxu_efficiency(256, 129, 256) == pytest.approx(129 / 256)
+    assert autotune.mxu_efficiency(8, 128, 128) == 1.0
+    assert autotune.mxu_efficiency(8, 100, 128) < 1.0
+
+
+def test_layer_sharding_ranking():
+    choices = autotune.choose_layer_sharding(
+        batch_tokens=65536, d_in=4096, d_out=4096, data_axis=16,
+        model_axis=16)
+    names = [c.name for c in choices]
+    assert set(names) == {"dp", "tp_col", "tp_row"}
+    assert choices[0].time_s <= choices[-1].time_s
+
+
+def test_alpha_beta_collective_costs():
+    c = interconnect.collective_time("all_reduce", 1e9, 16)
+    assert c.time_s > 0
+    # all-reduce moves ~2x the all-gather bytes.
+    g = interconnect.collective_time("all_gather", 1e9, 16)
+    assert 1.8 < c.bytes_on_wire / g.bytes_on_wire < 2.2
+    # alpha dominates tiny messages.
+    tiny = interconnect.collective_time("all_reduce", 1e3, 16)
+    assert tiny.alpha_s > tiny.beta_s
+
+
+def test_link_comparison_table_5_1():
+    links = interconnect.link_comparison()
+    assert links["V100-NVLink2"][0] == pytest.approx(47.99)
+    assert links["V100-PCIe"][0] == pytest.approx(10.63)
+    eff = interconnect.measured_vs_theoretical()
+    assert eff["V100-NVLink2"] > eff["V100-PCIe"]

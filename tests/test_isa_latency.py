@@ -1,0 +1,79 @@
+"""Control-word codec roundtrip (ch.2) + latency measurement method (§4.1)."""
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import hwmodel, isa, latency
+
+
+@given(stall=st.integers(0, 15), yf=st.integers(0, 1),
+       wb=st.integers(0, 7), rb=st.integers(0, 7),
+       wm=st.integers(0, 63), reuse=st.integers(0, 15))
+def test_control_roundtrip(stall, yf, wb, rb, wm, reuse):
+    ci = isa.ControlInfo(stall=stall, yield_flag=yf, write_bar=wb,
+                         read_bar=rb, wait_mask=wm, reuse=reuse)
+    assert isa.decode_control(ci.encode()) == ci
+
+
+@given(instr=st.integers(0, 2 ** 90 - 1), stall=st.integers(0, 15))
+def test_volta_word_roundtrip(instr, stall):
+    ci = isa.ControlInfo(stall=stall)
+    word = isa.pack_volta(instr, ci)
+    assert word < 2 ** 128
+    got_instr, got_ci = isa.unpack_volta(word)
+    assert got_instr == instr and got_ci == ci
+
+
+def test_pascal_control_word_packs_three_sections():
+    sections = [isa.ControlInfo(stall=i, reuse=i) for i in (1, 2, 3)]
+    word = isa.pack_pascal_control_word(sections)
+    assert word < 2 ** 63                     # MSB zero (paper)
+    assert isa.unpack_pascal_control_word(word) == sections
+
+
+def test_opcode_lengths_match_paper_claim():
+    hist = isa.opcode_length_histogram()
+    assert min(hist) >= 10 and max(hist) <= 13   # "10 to 13 bits"
+
+
+def test_volta_pascal_encoding_facts():
+    f = isa.ENCODING_FACTS
+    assert f["word_bits"] == 128
+    assert f["min_instruction_bits"] >= 91
+    assert f["min_control_bits"] >= 23
+
+
+@pytest.mark.parametrize("table,name", [
+    (hwmodel.VOLTA_INSTR_LATENCY, "volta"),
+    (hwmodel.PASCAL_INSTR_LATENCY, "pascal"),
+])
+def test_latency_measurement_recovers_table(table, name):
+    board = latency.Scoreboard(table)
+    for op, true_lat in table.items():
+        if true_lat <= 1:
+            continue
+        assert latency.measure_fixed_latency(board, op, max_stall=100) \
+            == true_lat, op
+
+
+def test_dependent_chain_scales_linearly():
+    board = latency.Scoreboard(hwmodel.VOLTA_INSTR_LATENCY)
+    c10 = latency.dependent_chain_cycles(board, "FFMA", 10)
+    c20 = latency.dependent_chain_cycles(board, "FFMA", 20)
+    assert c20 - c10 == 10 * hwmodel.VOLTA_INSTR_LATENCY["FFMA"]
+
+
+def test_volta_key_latencies_from_paper():
+    t = hwmodel.VOLTA_INSTR_LATENCY
+    assert t["FFMA"] == 4 and t["DFMA"] == 8 and t["HFMA2"] == 6
+    p = hwmodel.PASCAL_INSTR_LATENCY
+    assert p["FFMA"] == 6 and p["IMAD"] == 86
+
+
+def test_cpu_wallclock_harness_runs():
+    import jax.numpy as jnp
+
+    ns = latency.measure_op_chain(lambda x: x + 1.0,
+                                  jnp.zeros((8,), jnp.float32), n=64,
+                                  repeats=2)
+    assert ns > 0

@@ -1,0 +1,101 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret
+mode on CPU), plus hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.gemm import gemm as gemm_raw
+from repro.kernels.flash_attention import flash_attention as flash_raw
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 512, 128),
+                                   (384, 256, 640)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_sweep(m, k, n, dtype):
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(m, k), dtype)
+    y = jnp.asarray(rng.randn(k, n), dtype)
+    out = gemm_raw(x, y, bm=128, bk=128, bn=128, interpret=True)
+    expect = ref.gemm(x.astype(jnp.float32), y.astype(jnp.float32))
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect), rtol=tol, atol=tol * k)
+
+
+@given(bm=st.sampled_from([64, 128, 256]), bk=st.sampled_from([64, 128]),
+       bn=st.sampled_from([64, 128]))
+@settings(max_examples=6, deadline=None)
+def test_gemm_block_shape_invariance(bm, bk, bn):
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(256, 256), jnp.float32)
+    y = jnp.asarray(rng.randn(256, 256), jnp.float32)
+    out = gemm_raw(x, y, bm=bm, bk=bk, bn=bn, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ y),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("h,kvh", [(4, 4), (8, 2), (8, 1)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_gqa_sweep(h, kvh, causal):
+    rng = np.random.RandomState(2)
+    q = jnp.asarray(rng.randn(2, 128, h, 32), jnp.float32)
+    k = jnp.asarray(rng.randn(2, 128, kvh, 32), jnp.float32)
+    v = jnp.asarray(rng.randn(2, 128, kvh, 32), jnp.float32)
+    out = flash_raw(q, k, v, causal=causal, block_q=64, block_k=32,
+                    interpret=True)
+    expect = ref.flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.RandomState(3)
+    q = jnp.asarray(rng.randn(1, 64, 2, 16), jnp.bfloat16)
+    k = jnp.asarray(rng.randn(1, 64, 2, 16), jnp.bfloat16)
+    v = jnp.asarray(rng.randn(1, 64, 2, 16), jnp.bfloat16)
+    out = flash_raw(q, k, v, causal=True, block_q=32, block_k=32,
+                    interpret=True)
+    expect = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+@given(seed=st.integers(0, 100), chunk=st.sampled_from([8, 16, 32]))
+@settings(max_examples=8, deadline=None)
+def test_ssd_kernel_vs_reference(seed, chunk):
+    rng = np.random.RandomState(seed)
+    b, l, h, p, n = 2, 64, 2, 8, 4
+    x = jnp.asarray(rng.randn(b, l, h, p), jnp.float32) * 0.5
+    a = -jnp.abs(jnp.asarray(rng.randn(b, l, h), jnp.float32)) * 0.4
+    bm = jnp.asarray(rng.randn(b, l, n), jnp.float32) * 0.5
+    cm = jnp.asarray(rng.randn(b, l, n), jnp.float32) * 0.5
+    from repro.kernels.ssd_scan import ssd_scan
+    y, hf = ssd_scan(x, a, bm, cm, chunk=chunk, interpret=True)
+    yr, hr = ref.ssd_scan(x, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hr),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_pchase_kernel_follows_chain():
+    rng = np.random.RandomState(4)
+    perm = rng.permutation(128).astype(np.int32)
+    chain = np.empty(128, np.int32)
+    chain[perm] = np.roll(perm, -1)
+    out = ops.pchase(jnp.asarray(chain), 64)
+    np.testing.assert_array_equal(np.asarray(out), ref.pchase(chain, 64))
+
+
+def test_ops_autotuned_gemm_dispatches():
+    rng = np.random.RandomState(5)
+    x = jnp.asarray(rng.randn(256, 512), jnp.float32)
+    y = jnp.asarray(rng.randn(512, 384), jnp.float32)
+    out = ops.gemm(x, y)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ y),
+                               rtol=1e-4, atol=1e-3)

@@ -1,0 +1,109 @@
+"""Layer-level unit + property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers
+
+
+def test_rmsnorm_scale_invariance():
+    p = layers.rmsnorm_init(16)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 16))
+    y1 = layers.rmsnorm(p, x)
+    y2 = layers.rmsnorm(p, 7.0 * x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_layernorm_zero_mean_unit_var():
+    p = layers.layernorm_init(64)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64)) * 5 + 3
+    y = np.asarray(layers.layernorm(p, x))
+    np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(y.std(-1), 1.0, atol=1e-2)
+
+
+def test_rope_preserves_norm_and_relativity():
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 6, 2, 8))
+    pos = jnp.arange(6)[None]
+    y = layers.rope(x, pos)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+    # Relative property: <rope(q,i), rope(k,j)> depends only on i-j.
+    q = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 1, 8))
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 1, 1, 8))
+
+    def dot_at(i, j):
+        qi = layers.rope(q, jnp.array([[i]]))
+        kj = layers.rope(k, jnp.array([[j]]))
+        return float(jnp.sum(qi * kj))
+
+    assert dot_at(3, 1) == pytest.approx(dot_at(7, 5), rel=1e-4)
+
+
+def test_gqa_equals_mha_when_kv_heads_match():
+    cfg_g = layers.AttnConfig(32, 4, 4, 8)
+    p = layers.attention_init(jax.random.PRNGKey(5), cfg_g)
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 10, 32))
+    y_g, _ = layers.attention_apply(p, cfg_g, x)
+    # sdpa with group=1 must equal plain attention math.
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = layers.rope(q, jnp.arange(10)[None])
+    k = layers.rope(k, jnp.arange(10)[None])
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(8)
+    mask = layers.causal_mask(10)
+    pr = jax.nn.softmax(s + mask, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", pr, v)
+    y_ref = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    np.testing.assert_allclose(np.asarray(y_g), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_causal_mask_blocks_future():
+    cfg = layers.AttnConfig(16, 2, 2, 8)
+    p = layers.attention_init(jax.random.PRNGKey(7), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(8), (1, 8, 16))
+    y1, _ = layers.attention_apply(p, cfg, x)
+    x2 = x.at[:, -1].set(99.0)       # mutate the future
+    y2, _ = layers.attention_apply(p, cfg, x2)
+    np.testing.assert_allclose(np.asarray(y1[:, :-1]),
+                               np.asarray(y2[:, :-1]), rtol=1e-4, atol=1e-4)
+
+
+def test_attention_per_slot_cache_positions():
+    cfg = layers.AttnConfig(16, 2, 2, 8)
+    p = layers.attention_init(jax.random.PRNGKey(9), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(10), (2, 1, 16))
+    cache = {"k": jnp.zeros((2, 8, 2, 8)), "v": jnp.zeros((2, 8, 2, 8)),
+             "index": jnp.array([0, 3], jnp.int32)}
+    _, new = layers.attention_apply(p, cfg, x, cache=cache)
+    k = np.asarray(new["k"])
+    assert np.abs(k[0, 0]).sum() > 0 and np.abs(k[0, 3]).sum() == 0
+    assert np.abs(k[1, 3]).sum() > 0 and np.abs(k[1, 0]).sum() == 0
+    np.testing.assert_array_equal(np.asarray(new["index"]), [1, 4])
+
+
+def test_cross_attention_gate_starts_closed():
+    cfg = layers.AttnConfig(16, 2, 2, 8, causal=False)
+    p = layers.cross_attention_init(jax.random.PRNGKey(11), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(12), (1, 4, 16))
+    kv = jax.random.normal(jax.random.PRNGKey(13), (1, 6, 16))
+    y = layers.cross_attention_apply(p, cfg, x, kv)
+    np.testing.assert_allclose(np.asarray(y), 0.0, atol=1e-7)  # tanh(0)=0
+
+
+@given(act=st.sampled_from(["swiglu", "gelu"]))
+@settings(max_examples=4, deadline=None)
+def test_mlp_shapes(act):
+    cfg = layers.MLPConfig(16, 32, act)
+    p = layers.mlp_init(jax.random.PRNGKey(14), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(15), (2, 3, 16))
+    y = layers.mlp_apply(p, cfg, x)
+    assert y.shape == x.shape
+    assert not bool(jnp.any(jnp.isnan(y)))

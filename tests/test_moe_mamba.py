@@ -1,0 +1,114 @@
+"""MoE dispatch paths + Mamba/SSD properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import mamba, moe
+
+
+def _moe_pair(top_k=2, n_experts=4, cap=8.0):
+    kw = dict(d_model=16, d_ff=32, n_experts=n_experts, top_k=top_k,
+              capacity_factor=cap)
+    return (moe.MoEConfig(impl="dense_mask", **kw),
+            moe.MoEConfig(impl="capacity", **kw))
+
+
+@given(top_k=st.sampled_from([1, 2, 4]), seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_moe_paths_agree_with_generous_capacity(top_k, seed):
+    cfg_d, cfg_c = _moe_pair(top_k=top_k)
+    p = moe.moe_init(jax.random.PRNGKey(seed), cfg_d)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 6, 16))
+    y1, a1 = moe.moe_apply(p, cfg_d, x)
+    y2, a2 = moe.moe_apply(p, cfg_c, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+    assert a1 == pytest.approx(a2, rel=1e-4)
+
+
+def test_moe_capacity_drops_overflow():
+    cfg = moe.MoEConfig(d_model=8, d_ff=16, n_experts=2, top_k=1,
+                        capacity_factor=0.25, impl="capacity")
+    p = moe.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 8))
+    y, _ = moe.moe_apply(p, cfg, x)
+    # Some tokens dropped -> zero output rows exist.
+    norms = np.asarray(jnp.linalg.norm(y[0], axis=-1))
+    assert (norms < 1e-6).any()
+    assert (norms > 1e-6).any()
+
+
+def test_moe_aux_loss_balanced_is_one():
+    # Uniform routing -> aux ~= 1 (Switch normalization).
+    cfg = moe.MoEConfig(d_model=8, d_ff=16, n_experts=4, top_k=1)
+    p = moe.moe_init(jax.random.PRNGKey(2), cfg)
+    p = dict(p, router=jnp.zeros_like(p["router"]))
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 64, 8))
+    _, aux = moe.moe_apply(p, cfg, x)
+    assert float(aux) == pytest.approx(1.0, rel=0.05)
+
+
+def test_shared_expert_adds_signal():
+    kw = dict(d_model=8, d_ff=16, n_experts=2, top_k=1)
+    cfg0 = moe.MoEConfig(n_shared=0, **kw)
+    cfg1 = moe.MoEConfig(n_shared=1, **kw)
+    p = moe.moe_init(jax.random.PRNGKey(4), cfg1)
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 4, 8))
+    y0, _ = moe.moe_apply({k: v for k, v in p.items() if k != "shared"},
+                          cfg0, x)
+    y1, _ = moe.moe_apply(p, cfg1, x)
+    assert float(jnp.abs(y1 - y0).max()) > 1e-6
+
+
+@given(seed=st.integers(0, 30), chunk=st.sampled_from([4, 8, 16]))
+@settings(max_examples=10, deadline=None)
+def test_ssd_chunked_equals_reference(seed, chunk):
+    rng = np.random.RandomState(seed)
+    b, l, h, p, n = 2, 32, 2, 4, 8
+    x = jnp.asarray(rng.randn(b, l, h, p), jnp.float32) * 0.5
+    a = -jnp.abs(jnp.asarray(rng.randn(b, l, h), jnp.float32)) * 0.5
+    bm = jnp.asarray(rng.randn(b, l, n), jnp.float32) * 0.5
+    cm = jnp.asarray(rng.randn(b, l, n), jnp.float32) * 0.5
+    y1, h1 = mamba.ssd_reference(x, a, bm, cm)
+    y2, h2 = mamba.ssd_chunked(x, a, bm, cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssd_state_threading_across_calls():
+    # Running two halves with carried state == running the whole sequence.
+    rng = np.random.RandomState(7)
+    b, l, h, p, n = 1, 16, 2, 4, 8
+    x = jnp.asarray(rng.randn(b, l, h, p), jnp.float32)
+    a = -jnp.abs(jnp.asarray(rng.randn(b, l, h), jnp.float32)) * 0.3
+    bm = jnp.asarray(rng.randn(b, l, n), jnp.float32)
+    cm = jnp.asarray(rng.randn(b, l, n), jnp.float32)
+    y_full, _ = mamba.ssd_chunked(x, a, bm, cm, chunk=8)
+    y1, h1 = mamba.ssd_chunked(x[:, :8], a[:, :8], bm[:, :8], cm[:, :8],
+                               chunk=8)
+    y2, _ = mamba.ssd_chunked(x[:, 8:], a[:, 8:], bm[:, 8:], cm[:, 8:],
+                              chunk=8, h0=h1)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.concatenate([y1, y2], 1)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mamba_block_decode_matches_full():
+    cfg = mamba.MambaConfig(d_model=16, d_state=8, head_dim=4, expand=2,
+                            chunk=8)
+    p = mamba.mamba_init(jax.random.PRNGKey(8), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 12, 16))
+    y_full, _ = mamba.mamba_apply(p, cfg, x)
+    cache = mamba.init_cache(cfg, 2)
+    outs = []
+    for t in range(12):
+        yt, cache = mamba.mamba_apply(p, cfg, x[:, t:t + 1], cache=cache)
+        outs.append(yt)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.concatenate(outs, 1)),
+                               rtol=3e-4, atol=3e-4)

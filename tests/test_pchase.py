@@ -1,0 +1,105 @@
+"""Property tests: the dissector recovers *randomized* ground-truth
+geometries, not just the published V100 numbers."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dissect, hwmodel, pchase
+from repro.core.simulator import (LatencyConfig, MemoryHierarchy,
+                                  SetAssocCache, TLB)
+
+KiB = 1024
+
+
+def make_hier(l1_size=32 * KiB, l1_line=32, l1_sets=4, policy="lru",
+              reserved=0, l2_size=512 * KiB, l2_line=64, l2_ways=16,
+              tlb1=(16, 128 * KiB), tlb2=(64, 1024 * KiB),
+              caches_enabled=True):
+    return MemoryHierarchy(
+        SetAssocCache(l1_size, l1_line, sets=l1_sets, policy=policy,
+                      reserved_ways=reserved),
+        SetAssocCache(l2_size, l2_line, ways=l2_ways, policy="lru"),
+        TLB(tlb1[0] * tlb1[1], tlb1[1]),
+        TLB(tlb2[0] * tlb2[1], tlb2[1]),
+        LatencyConfig(),
+        caches_enabled=caches_enabled)
+
+
+@given(size_kib=st.sampled_from([8, 16, 24, 32, 64]),
+       line=st.sampled_from([32, 64, 128]),
+       sets=st.sampled_from([2, 4, 8]))
+@settings(max_examples=12)
+def test_recover_random_l1_geometry(size_kib, line, sets):
+    hier = make_hier(l1_size=size_kib * KiB, l1_line=line, l1_sets=sets,
+                     l2_size=4096 * KiB)
+    size = pchase.detect_size(hier, lo=2 * KiB, hi=256 * KiB, stride=8)
+    assert size == size_kib * KiB
+    got_line = pchase.detect_line(hier, size)
+    assert got_line == line
+    # L1-miss threshold probed by thrashing L1 (same recipe as dissect_l1 —
+    # the cold-scan L2 class is invisible when L1 and L2 share a line size).
+    l2_hit = pchase.measure_next_level_latency(hier, size)
+    ways = pchase.detect_ways(hier, size, miss_threshold=l2_hit,
+                              max_ways=2048)
+    assert size // (got_line * ways) == sets
+
+
+@given(reserved=st.sampled_from([4, 16, 56]))
+@settings(max_examples=6)
+def test_recover_prio_policy(reserved):
+    nominal = 32 * KiB
+    hier = make_hier(l1_size=nominal, policy="prio", reserved=reserved)
+    # threshold=0: the simulator is deterministic, so a single second-scan
+    # miss marks overflow; resolution below the stride pins the boundary.
+    size = pchase.detect_size(hier, lo=2 * KiB, hi=256 * KiB, stride=8,
+                              resolution=8, threshold=0.0)
+    expect = nominal - reserved * 4 * 32
+    assert abs(size - expect) < 8
+    if reserved >= 16:
+        # The size-deficit policy test needs the reserved region to exceed
+        # its 3% sensitivity (the paper's V100 case is ~5-22% short).
+        assert pchase.detect_policy(size, nominal) == "non-LRU"
+
+
+def test_lru_policy_detected():
+    hier = make_hier()
+    size = pchase.detect_size(hier, lo=2 * KiB, hi=256 * KiB, stride=8)
+    assert pchase.detect_policy(size, 32 * KiB) == "LRU"
+
+
+@given(entries1=st.sampled_from([8, 16, 32]),
+       page1_kib=st.sampled_from([128, 256]),
+       entries2=st.sampled_from([64, 128]))
+@settings(max_examples=8)
+def test_recover_random_tlbs(entries1, page1_kib, entries2):
+    page2 = 8 * page1_kib * KiB
+    hier = make_hier(tlb1=(entries1, page1_kib * KiB),
+                     tlb2=(entries2, page2), caches_enabled=False)
+    tlbs = pchase.dissect_tlbs(
+        hier,
+        page_candidates_l1=[32 * KiB, 64 * KiB, 128 * KiB, 256 * KiB,
+                            512 * KiB],
+        page_candidates_l2=[page1_kib * KiB * m for m in (1, 2, 4, 8, 16)],
+        max_pages=300)
+    assert tlbs[0].page_entry == page1_kib * KiB
+    assert tlbs[0].coverage == entries1 * page1_kib * KiB
+    assert tlbs[1].page_entry == page2
+    assert tlbs[1].coverage == entries2 * page2
+
+
+def test_v100_full_dissection_matches_paper():
+    rep = dissect.dissect(hwmodel.V100)
+    assert all(rep.matches.values()), rep.matches
+
+
+@pytest.mark.parametrize("gpu", ["P100", "M60", "K80"])
+def test_other_gpus_dissect(gpu):
+    rep = dissect.dissect(hwmodel.GPUS[gpu], include_tlb=False)
+    bad = {k: v for k, v in rep.matches.items() if not v}
+    assert not bad, bad
+
+
+def test_table_3_3_reproduction():
+    got = {k: v // KiB for k, v in dissect.table_3_3().items()}
+    assert got == {0: 121, 64: 57, 96: 25}    # paper Table 3.3

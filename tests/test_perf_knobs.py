@@ -1,0 +1,95 @@
+"""Correctness of the §Perf hillclimb knobs: every optimization must be a
+no-op (or bounded perturbation) on the math."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as T
+from repro.train import steps as train_steps
+
+
+@pytest.fixture(scope="module")
+def base():
+    cfg = configs.get_smoke("qwen3-4b")      # GQA: kv < heads
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab)
+    logits, _, _ = T.forward(params, cfg, tokens)
+    return cfg, params, tokens, logits
+
+
+def test_expand_kv_is_exact(base):
+    cfg, params, tokens, logits = base
+    cfg2 = dataclasses.replace(cfg, expand_kv=True)
+    logits2, _, _ = T.forward(params, cfg2, tokens)
+    np.testing.assert_allclose(np.asarray(logits2), np.asarray(logits),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_expand_kv_decode_is_exact(base):
+    cfg, params, tokens, _ = base
+    cfg2 = dataclasses.replace(cfg, expand_kv=True)
+    caches = T.init_caches(cfg2, 2, 16)
+    from repro.serve.engine import prefill
+    last, caches = prefill(params, cfg2, tokens[:, :-1], caches)
+    lg, _, _ = T.forward(params, cfg2, tokens[:, -1:], caches=caches)
+    full, _, _ = T.forward(params, cfg2, tokens)
+    np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(full[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_bf16_probs_bounded_perturbation(base):
+    cfg, params, tokens, logits = base
+    cfg2 = dataclasses.replace(cfg, attn_probs_fp32=False)
+    logits2, _, _ = T.forward(params, cfg2, tokens)
+    # Not exact (bf16 softmax), but probabilities must stay close.
+    p1 = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    p2 = jax.nn.softmax(logits2.astype(jnp.float32), -1)
+    assert float(jnp.abs(p1 - p2).max()) < 0.05
+
+
+def test_remat_policies_give_same_gradients():
+    cfg = configs.get_smoke("granite-3-8b")
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                                     cfg.vocab),
+        "labels": jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0,
+                                     cfg.vocab),
+    }
+    grads = {}
+    for name, kw in (("none", dict(remat=False)),
+                     ("full", dict(remat=True, remat_policy="full")),
+                     ("dots", dict(remat=True, remat_policy="dots"))):
+        c = dataclasses.replace(cfg, **kw)
+        params = T.init_params(jax.random.PRNGKey(0), c)
+        g = jax.grad(lambda p: train_steps.loss_fn(p, c, batch)[0])(params)
+        grads[name] = g
+    for name in ("full", "dots"):
+        diffs = jax.tree.map(
+            lambda a, b: float(jnp.abs(a - b).max()),
+            grads["none"], grads[name])
+        assert max(jax.tree.leaves(diffs)) < 1e-4, name
+
+
+def test_moe_capacity_factor_plumbs_through():
+    cfg = configs.get_smoke("dbrx-132b")
+    cfg = dataclasses.replace(cfg, moe_capacity_factor=2.0)
+    assert cfg.moe_cfg().capacity_factor == 2.0
+
+
+def test_int8_kv_cache_decode_close():
+    cfg = configs.get_smoke("qwen3-4b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (1, 6), 0, cfg.vocab)
+    full, _, _ = T.forward(params, cfg, tokens)
+    # int8 cache: prefill + decode; logits should rank-match bf16 closely.
+    caches = T.init_caches(cfg, 1, 8, dtype=jnp.float32)
+    from repro.serve.engine import prefill
+    _, caches = prefill(params, cfg, tokens[:, :-1], caches)
+    lg, _, _ = T.forward(params, cfg, tokens[:, -1:], caches=caches)
+    np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(full[:, -1]),
+                               rtol=2e-4, atol=2e-4)

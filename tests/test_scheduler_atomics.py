@@ -1,0 +1,44 @@
+"""Warp scheduler model (Table 2.1) + atomics contention model (Table 4.2)."""
+
+import numpy as np
+
+from repro.core import atomics, hwmodel, scheduler
+
+
+def test_scheduler_mapping():
+    assert [scheduler.scheduler_id(w) for w in range(8)] == [0, 1, 2, 3] * 2
+
+
+def test_table_2_1_same_vs_different_block():
+    t = scheduler.table_2_1()
+    for (a, b), measured in scheduler.PAPER_TABLE_2_1.items():
+        modeled = t[(a, b)]
+        # Same block pairs ~42-44, split pairs ~66.
+        assert abs(modeled - measured) / measured < 0.06, ((a, b), modeled)
+
+
+def test_min_threads_to_saturate():
+    assert scheduler.min_threads_to_saturate() == 128    # paper §2.2
+
+
+def test_atomics_fit_quality():
+    for gpu in ("V100", "P100", "M60"):
+        spec = hwmodel.GPUS[gpu]
+        res = atomics.model_residuals(spec, "shared")
+        errs = [abs(m - p) / p for p, m in res.values()]
+        assert np.mean(errs) < 0.45, (gpu, res)
+
+
+def test_kepler_emulated_atomics_blow_up():
+    # The paper: Kepler's lock-based shared atomics degrade ~linearly x2/level.
+    k = hwmodel.K80.atomic_latency
+    assert k[32][0] / k[1][0] > 40
+    v = hwmodel.V100.atomic_latency
+    assert v[32][0] / v[1][0] < 15
+
+
+def test_throughput_scenarios_ordering():
+    v = hwmodel.V100
+    s1 = atomics.throughput_scenario(v, 1)
+    s4 = atomics.throughput_scenario(v, 4)
+    assert s4 > s1        # no-contention multi-SM is the best case (paper)

@@ -1,0 +1,82 @@
+"""Serving: decode==forward consistency, engine vs reference generation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as T
+from repro.serve.engine import (Request, ServeConfig, ServingEngine,
+                                greedy_generate, prefill)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get_smoke("qwen3-4b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_prefill_then_decode_matches_full_forward(model):
+    cfg, params = model
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0, cfg.vocab)
+    logits_full, _, _ = T.forward(params, cfg, tokens)
+    caches = T.init_caches(cfg, 2, 16)
+    last, caches = prefill(params, cfg, tokens[:, :-1], caches)
+    logits_dec, _, _ = T.forward(params, cfg, tokens[:, -1:], caches=caches)
+    np.testing.assert_allclose(np.asarray(logits_dec[:, 0]),
+                               np.asarray(logits_full[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_engine_matches_reference_generation(model):
+    cfg, params = model
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(2, cfg.vocab, size=6).astype(np.int32)
+               for _ in range(4)]
+    max_new = 6
+    # Reference: per-prompt greedy loop.
+    expect = {}
+    for rid, pr in enumerate(prompts):
+        out = greedy_generate(params, cfg, jnp.asarray(pr)[None], max_new,
+                              max_len=32)
+        expect[rid] = np.asarray(out[0]).tolist()
+    # Engine with 2 slots over 4 requests (forces slot reuse).
+    eng = ServingEngine(params, cfg, ServeConfig(max_len=32, batch=2,
+                                                 eos_id=-1))
+    for rid, pr in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=pr, max_new=max_new))
+    got = eng.run_until_drained()
+    assert set(got) == set(expect)
+    for rid in expect:
+        assert got[rid] == expect[rid], rid
+
+
+def test_engine_mixed_prompt_lengths(model):
+    cfg, params = model
+    rng = np.random.RandomState(1)
+    prompts = {0: rng.randint(2, cfg.vocab, 3).astype(np.int32),
+               1: rng.randint(2, cfg.vocab, 11).astype(np.int32)}
+    eng = ServingEngine(params, cfg, ServeConfig(max_len=32, batch=2,
+                                                 eos_id=-1))
+    for rid, pr in prompts.items():
+        eng.submit(Request(rid=rid, prompt=pr, max_new=4))
+    got = eng.run_until_drained()
+    for rid, pr in prompts.items():
+        ref = greedy_generate(params, cfg, jnp.asarray(pr)[None], 4,
+                              max_len=32)
+        assert got[rid] == np.asarray(ref[0]).tolist(), rid
+
+
+def test_mamba_generation_consistency():
+    cfg = configs.get_smoke("mamba2-370m")
+    params = T.init_params(jax.random.PRNGKey(2), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0, cfg.vocab)
+    out1 = greedy_generate(params, cfg, prompt, 5, max_len=16)
+    # Teacher-forced check: feeding generated tokens reproduces argmax chain.
+    seq = jnp.concatenate([prompt, out1[:, :-1]], axis=1)
+    logits, _, _ = T.forward(params, cfg, seq)
+    np.testing.assert_array_equal(
+        np.asarray(jnp.argmax(logits[:, prompt.shape[1] - 1:], -1)),
+        np.asarray(out1))

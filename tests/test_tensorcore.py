@@ -1,0 +1,60 @@
+"""HMMA fragment maps (paper Figs 4.2-4.7) + emulation exactness."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tensorcore as tc
+
+
+def test_fragment_map_spot_values_from_paper():
+    # Fig 4.2 (A, column-major byte addresses -> thread pairs).
+    assert tc.a_fragment_threads(0, 0) == (0, 8)       # addr 0
+    assert tc.a_fragment_threads(4, 0) == (16, 24)     # addr 8
+    assert tc.a_fragment_threads(8, 0) == (4, 12)      # addr 16
+    assert tc.a_fragment_threads(12, 0) == (20, 28)    # addr 24
+    assert tc.a_fragment_threads(0, 1) == (1, 9)       # addr 32
+    assert tc.a_fragment_threads(0, 4) == (0, 8)       # addr 128 wraps
+    # Fig 4.3 (B).
+    assert tc.b_fragment_threads(0, 0) == (0, 4)
+    assert tc.b_fragment_threads(0, 4) == (16, 20)     # addr 128
+    assert tc.b_fragment_threads(0, 8) == (8, 12)      # addr 256
+    assert tc.b_fragment_threads(0, 12) == (24, 28)    # addr 384
+    # Fig 4.7 (C, fp32).
+    assert tc.c_fragment_thread(0, 0) == 0
+    assert tc.c_fragment_thread(1, 0) == 1
+    assert tc.c_fragment_thread(4, 0) == 16            # addr 16
+    assert tc.c_fragment_thread(8, 0) == 4             # addr 32
+    assert tc.c_fragment_thread(15, 15) == 31          # addr 1020
+    assert tc.c_fragment_thread(0, 8) == 8             # addr 512
+
+
+def test_loads_per_thread_match_paper():
+    # Paper: every thread loads 16 elements of A and 16 of B.
+    assert set(tc.loads_per_thread("A").tolist()) == {16}
+    assert set(tc.loads_per_thread("B").tolist()) == {16}
+    assert set(tc.loads_per_thread("C").tolist()) == {8}
+
+
+def test_group_blocks_partition_c():
+    seen = np.zeros((16, 16), int)
+    for g in range(8):
+        rs, cs = tc.group_block(g)
+        seen[rs, cs] += 1
+        block = np.zeros((16, 16), bool)
+        block[rs, cs] = True
+        owners = {tc.c_group(r, c) for r in range(16) for c in range(16)
+                  if block[r, c]}
+        assert owners == {g}
+    assert (seen == 1).all()
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10)
+def test_emulation_equals_matmul(seed):
+    rng = np.random.RandomState(seed)
+    a = rng.randint(-4, 5, (16, 16)).astype(np.float16)
+    b = rng.randint(-4, 5, (16, 16)).astype(np.float16)
+    c = rng.randint(-4, 5, (16, 16)).astype(np.float32)
+    out = tc.emulate_mma_sync(a, b, c)
+    ref = a.astype(np.float32) @ b.astype(np.float32) + c
+    assert np.array_equal(out, ref)
