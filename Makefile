@@ -1,0 +1,11 @@
+.PHONY: check check-all test
+
+# Fast tier-1 gate: import-walk smoke + fast tests.
+check:
+	./scripts/check.sh
+
+# Everything, including slow multi-device subprocess / compile tests.
+check-all:
+	./scripts/check.sh --all
+
+test: check

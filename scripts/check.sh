@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 gate in one command: import-walk smoke first (fails in seconds on
+# a broken import surface), then the fast test suite.
+#   ./scripts/check.sh            # fast gate (-m "not slow")
+#   ./scripts/check.sh --all      # include slow multi-device/compile tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+MARK=(-m "not slow")
+if [[ "${1:-}" == "--all" ]]; then
+    MARK=()
+    shift
+fi
+
+echo "== import-walk smoke =="
+python -m pytest -x -q tests/test_import_walk.py
+
+echo "== test suite =="
+# ${MARK[@]+...}: empty-array expansion trips `set -u` on bash < 4.4.
+python -m pytest -x -q ${MARK[@]+"${MARK[@]}"} "$@"

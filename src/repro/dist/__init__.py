@@ -1,0 +1,16 @@
+"""Distribution layer: sharding rules, gradient compression, overlapped
+collectives, and pipeline parallelism.
+
+Submodules (see README.md in this directory for the full API):
+
+* ``sharding``          — logical-axis rulesets, param specs, activation
+                          annotation (``shard``) and ``use_ruleset``.
+* ``compression``       — int8 gradient quantization + error feedback.
+* ``collective_matmul`` — all-gather matmul as an overlapped
+                          collective-permute ring (``ag_matmul``).
+* ``pipeline``          — GPipe transform over a mesh axis (``gpipe``) and
+                          ``bubble_fraction``.
+"""
+
+from repro.dist import (collective_matmul, compression, pipeline,  # noqa
+                        sharding)

@@ -1,0 +1,58 @@
+"""Gradient compression: symmetric int8 quantization with error feedback.
+
+``int8_roundtrip`` is the wire format a compressed all-reduce would move:
+per-leaf symmetric quantization to int8 with a single fp32 scale
+(max|g| / 127), immediately dequantized.  The roundtrip error of any
+element is bounded by scale/2, so the train step can use it as a drop-in
+gradient transform (``make_train_step(compress_grads=True)``).
+
+``ErrorFeedback`` is the standard EF-SGD residual accumulator: the
+quantization error of step t is added back into the gradient at step t+1,
+so compression bias does not accumulate over training.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize_leaf(g):
+    g32 = g.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(g32)) / 127.0
+    # All-zero leaves: keep scale finite, quantize to exact zeros.
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(g32 / safe), -127, 127).astype(jnp.int8)
+    return (q.astype(jnp.float32) * safe).astype(g.dtype)
+
+
+def int8_roundtrip(grads: Any) -> Any:
+    """Quantize every leaf to int8 and back.  |err| <= max|g|/254 per
+    element (half an int8 step at the leaf's scale)."""
+    return jax.tree.map(_quantize_leaf, grads)
+
+
+class ErrorFeedback:
+    """Residual error accumulator for compressed gradients.
+
+    residual = ErrorFeedback.init(grads)           # zeros_like
+    compressed, residual = ErrorFeedback.compress(grads, residual)
+
+    ``compressed`` is the int8 roundtrip of ``grads + residual``; the new
+    residual is exactly the quantization error, re-injected next step.
+    """
+
+    @staticmethod
+    def init(grads: Any) -> Any:
+        return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    @staticmethod
+    def compress(grads: Any, residual: Any) -> Tuple[Any, Any]:
+        corrected = jax.tree.map(
+            lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+        compressed = int8_roundtrip(corrected)
+        new_residual = jax.tree.map(
+            lambda c, q: c - q.astype(jnp.float32), corrected, compressed)
+        return compressed, new_residual

@@ -1,0 +1,209 @@
+"""Sharding rules: logical axis names -> mesh axes, with divisibility
+fallback.
+
+The whole model/trainer/server stack names its tensor dimensions with
+*logical* axes ("batch", "heads", "mlp", ...).  A :class:`Ruleset` maps
+those names onto the axes of whatever mesh is active, replicating any
+dimension whose size does not divide the target mesh axes — so the same
+model code runs unmodified on 1 chip, a 16x16 pod, or a 2x16x16 multi-pod
+mesh, and a config whose head count doesn't divide the model axis simply
+replicates those heads instead of failing to lower.
+
+Three entry points:
+
+* ``ruleset.spec(names, shapes)`` — activation/batch specs.
+* ``param_spec(path, shape, ruleset)`` — parameter specs driven by the leaf
+  name (``_LEAF_NAMES``), with optional FSDP over the "data" axis.
+* ``shard(x, *names)`` — annotates an activation with the ambient ruleset
+  installed by ``use_ruleset``; a no-op outside a mesh context, so layer
+  code never branches on distribution.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# Logical axis -> mesh axis (or tuple of axes, composed left-to-right).
+# ``None`` means always replicate.  Overridable per-Ruleset via ``rules=``
+# (e.g. the dry-run's sequence-parallel cache: {"cache_seq": "data"}).
+_DEFAULT_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "cache_seq": None,
+    "embed": None,
+    "head_dim": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "ssm_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_capacity": None,
+    "stage": "stage",
+}
+
+# Parameter leaf name -> logical names of its *trailing* dims.  Leading
+# extra dims (the lax.scan period-stacking in models/transformer.py) are
+# replicated.  Leaves not listed here (norm scales, biases, scalars)
+# replicate, modulo FSDP.
+_LEAF_NAMES: Dict[str, Tuple[Optional[str], ...]] = {
+    # attention (layers.py): 3D weights keep true head counts visible.
+    "wq": ("embed", "heads", "head_dim"),
+    "wk": ("embed", "kv_heads", "head_dim"),
+    "wv": ("embed", "kv_heads", "head_dim"),
+    "wo": ("heads", "head_dim", "embed"),
+    "b_q": ("heads", "head_dim"),
+    "b_k": ("kv_heads", "head_dim"),
+    "b_v": ("kv_heads", "head_dim"),
+    # mlp
+    "w_gate": ("embed", "mlp"),
+    "w_up": ("embed", "mlp"),
+    "b_up": ("mlp",),
+    "w_down": ("mlp", "embed"),
+    # embeddings
+    "embedding": ("vocab", "embed"),
+    "lm_head": ("embed", "vocab"),
+    # moe (moe.py): expert dim first; inner dims replicate because "model"
+    # is already consumed by the expert-parallel axis.
+    "router": ("embed", "experts"),
+    "expert_gate": ("experts", "embed", "mlp"),
+    "expert_up": ("experts", "embed", "mlp"),
+    "expert_down": ("experts", "mlp", "embed"),
+    # mamba (mamba.py)
+    "w_x": ("embed", "ssm_heads", "head_dim"),
+    "w_z": ("embed", "ssm_heads", "head_dim"),
+    "w_B": ("embed", None),
+    "w_C": ("embed", None),
+    "w_dt": ("embed", "ssm_heads"),
+    "dt_bias": ("ssm_heads",),
+    "A_log": ("ssm_heads",),
+    "D": ("ssm_heads",),
+    "conv_w": (None, "ssm_heads", "head_dim"),
+    "w_ssm_out": ("ssm_heads", "head_dim", "embed"),
+}
+
+# FSDP only pays for itself on large leaves; sharding every norm scale
+# just adds gather latency.
+_FSDP_MIN_ELEMENTS = 1 << 16
+
+
+@dataclasses.dataclass
+class Ruleset:
+    """Sharding rules bound to a mesh.
+
+    mesh:  a jax Mesh (or any object with a ``.shape`` mapping of axis name
+           -> size; tests use a stub).  ``None`` disables sharding.
+    rules: overrides merged over ``_DEFAULT_RULES``.
+    fsdp:  additionally shard each large parameter's largest replicated dim
+           over the "data" axis (ZeRO-3-style; train-time only in practice).
+    """
+
+    mesh: Any = None
+    rules: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    fsdp: bool = False
+
+    def _rule(self, name: Optional[str]):
+        if name is None:
+            return None
+        if name in self.rules:
+            return self.rules[name]
+        return _DEFAULT_RULES.get(name)
+
+    def _axis_for(self, name: Optional[str], dim: Optional[int], used: set):
+        """Resolve one logical dim to mesh axes, with divisibility fallback:
+        try the full composed axis tuple, then progressively drop the
+        outermost axis, then replicate."""
+        target = self._rule(name)
+        if target is None or self.mesh is None:
+            return None
+        axes = (target,) if isinstance(target, str) else tuple(target)
+        sizes = dict(self.mesh.shape)
+        axes = tuple(a for a in axes
+                     if a in sizes and sizes[a] > 1 and a not in used)
+        while axes:
+            prod = int(np.prod([sizes[a] for a in axes]))
+            if dim is not None and dim % prod == 0:
+                used.update(axes)
+                return axes if len(axes) > 1 else axes[0]
+            axes = axes[1:]
+        return None
+
+    def spec(self, names: Sequence[Optional[str]],
+             shapes: Sequence[Optional[int]]) -> P:
+        """PartitionSpec for a tensor whose dims carry logical ``names``.
+        Each mesh axis is used at most once; non-divisible dims replicate."""
+        used: set = set()
+        return P(*[self._axis_for(n, d, used)
+                   for n, d in zip(names, shapes)])
+
+
+def param_spec(path: Sequence[Any], shape: Sequence[int],
+               ruleset: Ruleset) -> P:
+    """PartitionSpec for a parameter leaf, keyed on its pytree leaf name.
+
+    ``path`` is the tuple of pytree keys (strings); only the last entry is
+    consulted, so optimizer-state mirrors ({"m": params, ...}) and the
+    scan-stacked "blocks" subtree resolve identically to the raw params.
+    With ``ruleset.fsdp`` the largest still-replicated divisible dim of any
+    large leaf is additionally sharded over "data".
+    """
+    leaf = str(path[-1]) if len(path) else ""
+    names = _LEAF_NAMES.get(leaf, ())
+    names = names[-len(shape):] if len(shape) < len(names) else names
+    names = (None,) * (len(shape) - len(names)) + tuple(names)
+    used: set = set()
+    parts = [ruleset._axis_for(n, d, used) for n, d in zip(names, shape)]
+    if ruleset.fsdp and ruleset.mesh is not None and "data" not in used:
+        sizes = dict(ruleset.mesh.shape)
+        data = sizes.get("data", 1)
+        if data > 1 and int(np.prod(shape or [1])) >= _FSDP_MIN_ELEMENTS:
+            free = sorted((i for i, p in enumerate(parts) if p is None),
+                          key=lambda i: -shape[i])
+            for i in free:
+                if shape[i] % data == 0:
+                    parts[i] = "data"
+                    break
+    return P(*parts)
+
+
+# ----------------------------------------------------------------------------
+# Ambient ruleset context (thread-local, re-entrant)
+# ----------------------------------------------------------------------------
+
+_ACTIVE = threading.local()
+
+
+def current_ruleset() -> Optional[Ruleset]:
+    return getattr(_ACTIVE, "ruleset", None)
+
+
+@contextlib.contextmanager
+def use_ruleset(ruleset: Optional[Ruleset]):
+    """Install ``ruleset`` as the ambient target of ``shard``.  Passing
+    ``None`` (no mesh configured) is allowed and leaves ``shard`` a no-op."""
+    prev = current_ruleset()
+    _ACTIVE.ruleset = ruleset
+    try:
+        yield ruleset
+    finally:
+        _ACTIVE.ruleset = prev
+
+
+def shard(x, *names: Optional[str]):
+    """Annotate activation ``x`` with the ambient ruleset's spec for
+    ``names`` (one logical name, or None, per dim).  Outside a
+    ``use_ruleset`` context — or with a mesh-less ruleset — returns ``x``
+    unchanged, so model code is distribution-agnostic."""
+    ruleset = current_ruleset()
+    if ruleset is None or ruleset.mesh is None:
+        return x
+    spec = ruleset.spec(names, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(ruleset.mesh, spec))

@@ -9,8 +9,11 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class ScheduleConfig:
-    peak_lr: float = 3e-4
-    warmup_steps: int = 100
+    # Defaults match the launcher's smoke-scale flags (launch/train.py):
+    # short warmup so <100-step smoke/integration runs actually leave the
+    # warmup ramp and learn.  Production runs pass explicit values.
+    peak_lr: float = 3e-3
+    warmup_steps: int = 20
     total_steps: int = 10000
     min_ratio: float = 0.1
     kind: str = "cosine"        # "cosine" | "linear" | "constant"

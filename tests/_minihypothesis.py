@@ -1,0 +1,155 @@
+"""Minimal, deterministic stand-in for ``hypothesis`` when it isn't
+installed (offline CI image).
+
+Implements exactly the surface this repo's tests use — ``given``,
+``settings`` (decorator + register_profile/load_profile), and
+``strategies.integers / sampled_from / booleans / composite`` — by drawing
+a fixed number of pseudo-random examples seeded from the test's qualified
+name, so runs are reproducible and fixture-free (the wrapper exposes a
+zero-argument signature to pytest, like real hypothesis).
+
+``tests/conftest.py`` installs this module as ``sys.modules["hypothesis"]``
+only when the real package is missing; with hypothesis installed it is
+never imported.
+"""
+
+from __future__ import annotations
+
+import sys
+import types
+import zlib
+
+import numpy as np
+
+
+# ----------------------------------------------------------------------------
+# Strategies
+# ----------------------------------------------------------------------------
+
+class Strategy:
+    def __init__(self, sample):
+        self._sample = sample        # fn(rng: RandomState) -> value
+
+    def map(self, f):
+        return Strategy(lambda rng: f(self._sample(rng)))
+
+
+def integers(min_value, max_value):
+    span = int(max_value) - int(min_value)
+
+    def sample(rng):
+        if span < 2 ** 31 - 1:
+            return int(min_value) + int(rng.randint(0, span + 1))
+        # Wide ranges (e.g. 2**90): draw raw bytes, reduce mod span.
+        return int(min_value) + int.from_bytes(rng.bytes(16),
+                                               "little") % (span + 1)
+
+    return Strategy(sample)
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return Strategy(lambda rng: elements[rng.randint(0, len(elements))])
+
+
+def booleans():
+    return Strategy(lambda rng: bool(rng.randint(0, 2)))
+
+
+def composite(fn):
+    """@st.composite: ``fn(draw, *args)`` becomes a strategy factory."""
+
+    def factory(*args, **kwargs):
+        def sample(rng):
+            return fn(lambda strat: strat._sample(rng), *args, **kwargs)
+
+        return Strategy(sample)
+
+    return factory
+
+
+# ----------------------------------------------------------------------------
+# settings
+# ----------------------------------------------------------------------------
+
+class settings:
+    _profiles: dict = {}
+    _active = None                   # set below to a default instance
+
+    def __init__(self, max_examples=20, deadline=None, derandomize=True,
+                 **_ignored):
+        self.max_examples = max_examples
+        self.deadline = deadline
+        self.derandomize = derandomize
+
+    def __call__(self, fn):          # used as @settings(...) decorator
+        fn._mh_settings = self
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, **kwargs):
+        cls._profiles[name] = cls(**kwargs)
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._active = cls._profiles[name]
+
+
+settings._active = settings()
+
+
+# ----------------------------------------------------------------------------
+# given
+# ----------------------------------------------------------------------------
+
+def given(*arg_strategies, **kw_strategies):
+    def decorate(fn):
+        def wrapper():
+            conf = (getattr(wrapper, "_mh_settings", None)
+                    or getattr(fn, "_mh_settings", None)
+                    or settings._active)
+            n = conf.max_examples or 20
+            name = f"{fn.__module__}.{getattr(fn, '__qualname__', fn.__name__)}"
+            base = zlib.crc32(name.encode())
+            for i in range(n):
+                rng = np.random.RandomState((base + i) % (2 ** 32))
+                args = [s._sample(rng) for s in arg_strategies]
+                kwargs = {k: s._sample(rng)
+                          for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i}: args={args!r} "
+                        f"kwargs={kwargs!r}") from e
+
+        # Copy identity by hand: functools.wraps would set __wrapped__ and
+        # pytest would then see the original signature and demand fixtures
+        # for every strategy parameter.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        if hasattr(fn, "pytestmark"):
+            wrapper.pytestmark = fn.pytestmark
+        return wrapper
+
+    return decorate
+
+
+def assume(condition):
+    """Best-effort: abort the whole example loop is overkill for a shim;
+    raise to surface impossible assumptions instead of silently passing."""
+    if not condition:
+        raise AssertionError("assume() condition failed under minihypothesis")
+
+
+def install():
+    """Register this module as ``hypothesis`` (+``.strategies``)."""
+    mod = sys.modules[__name__]
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "booleans", "composite"):
+        setattr(strategies, name, globals()[name])
+    mod.strategies = strategies
+    sys.modules.setdefault("hypothesis", mod)
+    sys.modules.setdefault("hypothesis.strategies", strategies)

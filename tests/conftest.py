@@ -4,6 +4,15 @@ import sys
 # Tests run against 1 CPU device; the 512-device dry-run sets its own flags
 # in-process (launch/dryrun.py) and is exercised here via subprocesses only.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    # Offline image without hypothesis: install the deterministic local
+    # fallback so the property-test modules still collect and run.
+    import _minihypothesis
+    _minihypothesis.install()
 
 from hypothesis import settings
 
