@@ -1,8 +1,13 @@
-.PHONY: check check-all test
+.PHONY: check check-all test bench-fast
 
 # Fast tier-1 gate: import-walk smoke + fast tests.
 check:
 	./scripts/check.sh
+
+# Serving fast-path bench: engine tokens/sec + modeled naive-vs-flash-decode
+# speedup, persisted for diffing across PRs.
+bench-fast:
+	PYTHONPATH=src python -m benchmarks.tpu_serving --out BENCH_serving.json
 
 # Everything, including slow multi-device subprocess / compile tests.
 check-all:

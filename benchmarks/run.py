@@ -39,6 +39,7 @@ MODULES = [
     "tpu_vmem",         # VMEM working-set budget + host p-chase demo
     "tpu_collectives",  # ICI alpha-beta curves over a real mesh  [slow]
     "tpu_e2e",          # roofline summary of the dry-run cells
+    "tpu_serving",      # engine tokens/sec + modeled flash-decode speedup
 ]
 
 SLOW = {"table_3_1", "tpu_collectives"}

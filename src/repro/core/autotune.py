@@ -18,6 +18,9 @@ geometry tables exist to inform.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import tempfile
 from typing import Iterable, List, Optional, Tuple
 
 from repro.core import hwmodel
@@ -128,6 +131,208 @@ def tuning_gain(p: GemmProblem,
         "tuned": {"config": dataclasses.astuple(cfg), **terms},
         "speedup": t_naive / terms["time_s"],
     }
+
+
+# ----------------------------------------------------------------------------
+# Attention block selection (flash prefill + flash decode).
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnProblem:
+    """One flash-attention launch: ``batch * n_heads`` independent rows of a
+    (sq x skv x head_dim) attention, causally masked or not.
+
+    For flash *decode* set ``sq`` to the GQA group size (queries per KV head)
+    and ``n_heads`` to ``n_kv_heads`` — that is exactly the row shape the
+    decode kernel runs per (slot, kv head) grid step.
+    """
+
+    sq: int
+    skv: int
+    n_heads: int
+    head_dim: int
+    batch: int = 1
+    causal: bool = True
+    in_bytes: int = 2          # bf16
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnBlock:
+    block_q: int
+    block_k: int
+
+    def vmem_bytes(self, p: AttnProblem) -> int:
+        # Double-buffered q/k/v input tiles + fp32 scores tile + the
+        # m/l/acc online-softmax scratch that persists across K steps.
+        d = p.head_dim
+        return (2 * (self.block_q + 2 * self.block_k) * d * p.in_bytes
+                + self.block_q * self.block_k * 4
+                + self.block_q * (d + 2) * 4)
+
+
+def _attn_visited_blocks(p: AttnProblem, c: AttnBlock) -> int:
+    """Number of (q-block, k-block) grid steps the skipped-load causal grid
+    actually visits — the quantity the scalar-prefetch map shrinks."""
+    nq = _ceil_div(p.sq, c.block_q)
+    nk = _ceil_div(p.skv, c.block_k)
+    if not p.causal:
+        return nq * nk
+    off = p.skv - p.sq          # query i attends keys <= i + off
+    total = 0
+    for qi in range(nq):
+        last_row = min(qi * c.block_q + c.block_q - 1, p.sq - 1)
+        total += min(_ceil_div(last_row + off + 1, c.block_k), nk)
+    return total
+
+
+def attn_cost(p: AttnProblem, c: AttnBlock,
+              tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU
+              ) -> Tuple[float, dict]:
+    """Modeled execution time (seconds) of the flash kernel, plus terms.
+
+    Same three prices as ``gemm_cost``: MXU compute at the padded-tile
+    efficiency, HBM streaming traffic, and the VMEM footprint acting as a
+    hard feasibility constraint (handled by ``candidate_attn_blocks``).
+    K/V re-stream once per *visited* q-block — the skipped-load causal grid
+    (and the per-slot length clamp in flash decode) shows up as fewer
+    visited blocks, hence less traffic and fewer MXU steps.
+    """
+    rows = p.batch * p.n_heads
+    visited = _attn_visited_blocks(p, c)
+    bq = min(c.block_q, p.sq)
+    bk = min(c.block_k, p.skv)
+    # Two matmuls per visited block: QK^T (bq,d)x(d,bk) and PV (bq,bk)x(bk,d).
+    flops = rows * visited * 4.0 * bq * bk * p.head_dim
+    eff = min(mxu_efficiency(bq, p.head_dim, bk, tpu),
+              mxu_efficiency(bq, bk, p.head_dim, tpu))
+    compute_s = flops / (tpu.peak_bf16_flops * eff)
+    # HBM traffic: Q and O touched once per row; K/V streamed per visit.
+    qo_bytes = rows * 2 * p.sq * p.head_dim * p.in_bytes
+    kv_bytes = rows * visited * 2 * bk * p.head_dim * p.in_bytes
+    memory_s = (qo_bytes + kv_bytes) / tpu.hbm_bandwidth
+    t = max(compute_s, memory_s)
+    return t, {"compute_s": compute_s, "memory_s": memory_s,
+               "traffic_bytes": qo_bytes + kv_bytes,
+               "visited_blocks": visited, "mxu_efficiency": eff}
+
+
+def candidate_attn_blocks(p: AttnProblem,
+                          tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU,
+                          vmem_fraction: float = 0.5) -> List[AttnBlock]:
+    budget = int(tpu.vmem_bytes * vmem_fraction)
+    dims = [128, 256, 512, 1024]
+    out = []
+    for bq in dims:
+        if bq > max(p.sq, 128):
+            continue
+        for bk in dims:
+            if bk > max(p.skv, 128):
+                continue
+            c = AttnBlock(bq, bk)
+            if c.vmem_bytes(p) <= budget:
+                out.append(c)
+    return out or [AttnBlock(128, 128)]
+
+
+NAIVE_ATTN_BLOCK = AttnBlock(128, 128)
+
+# Persistent tuning cache: problem -> chosen block, refreshed write-through.
+# Lives next to the benchmark artifacts so TPU-measured entries and modeled
+# entries share one file; all IO is best-effort (read-only images just
+# re-derive the analytical choice).
+_REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+TUNING_CACHE_PATH = os.environ.get(
+    "REPRO_ATTN_TUNING_CACHE",
+    os.path.join(_REPO_ROOT, "benchmarks", "artifacts",
+                 "attn_tuning_cache.json"))
+_tuning_cache: Optional[dict] = None
+
+
+def _cache_key(p: AttnProblem, tpu: hwmodel.TPUSpec) -> str:
+    return (f"{tpu.name}:sq={p.sq}:skv={p.skv}:h={p.n_heads}"
+            f":d={p.head_dim}:b={p.batch}:causal={int(p.causal)}"
+            f":bytes={p.in_bytes}")
+
+
+def _load_tuning_cache() -> dict:
+    global _tuning_cache
+    if _tuning_cache is None:
+        try:
+            with open(TUNING_CACHE_PATH) as f:
+                _tuning_cache = json.load(f)
+        except (OSError, ValueError):
+            _tuning_cache = {}
+    return _tuning_cache
+
+
+def _store_tuning_cache(key: str, entry: dict) -> None:
+    cache = _load_tuning_cache()
+    cache[key] = entry
+    try:
+        os.makedirs(os.path.dirname(TUNING_CACHE_PATH), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(TUNING_CACHE_PATH),
+                                   suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(cache, f, indent=1, sort_keys=True)
+        os.replace(tmp, TUNING_CACHE_PATH)
+    except OSError:
+        pass                       # read-only image: in-memory cache only
+
+
+def choose_attn_block(p: AttnProblem,
+                      tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU,
+                      use_cache: bool = True) -> Tuple[AttnBlock, dict]:
+    """Minimum-modeled-time (block_q, block_k), persisted across processes."""
+    key = _cache_key(p, tpu)
+    if use_cache:
+        hit = _load_tuning_cache().get(key)
+        if hit is not None:
+            blk = AttnBlock(hit["block_q"], hit["block_k"])
+            # Entries persist across cost-model/hardware-spec changes (and
+            # may be TPU-measured or hand-edited): only trust ones still in
+            # the feasible candidate set, else re-derive.
+            if blk in candidate_attn_blocks(p, tpu):
+                return blk, dict(hit["terms"], time_s=hit["time_s"],
+                                 cached=True)
+    best, best_t, best_terms = None, float("inf"), None
+    for c in candidate_attn_blocks(p, tpu):
+        t, terms = attn_cost(p, c, tpu)
+        if t < best_t:
+            best, best_t, best_terms = c, t, terms
+    if use_cache:
+        _store_tuning_cache(key, {"block_q": best.block_q,
+                                  "block_k": best.block_k,
+                                  "time_s": best_t, "terms": best_terms})
+    return best, dict(best_terms, time_s=best_t)
+
+
+def decode_attn_speedup(max_len: int, lengths: Iterable[int], n_heads: int,
+                        n_kv_heads: int, head_dim: int,
+                        tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU) -> dict:
+    """Modeled naive-vs-fast decode attention cost for one engine tick.
+
+    Naive: every slot attends over the full ``max_len`` cache (the seed
+    engine's behavior). Fast: flash decode clamps each slot's K/V stream to
+    its actual length. Reported by ``benchmarks/tpu_serving.py``.
+    """
+    group = max(1, n_heads // n_kv_heads)
+
+    def tick_cost(ls):
+        t = 0.0
+        for length in ls:
+            p = AttnProblem(sq=group, skv=max(int(length), 1),
+                            n_heads=n_kv_heads, head_dim=head_dim,
+                            causal=False)
+            c, _ = choose_attn_block(p, tpu, use_cache=False)
+            t += attn_cost(p, c, tpu)[0]
+        return t
+
+    lengths = list(lengths)
+    naive = tick_cost([max_len] * len(lengths))
+    fast = tick_cost(lengths)
+    return {"naive_s": naive, "fast_s": fast,
+            "speedup": naive / fast if fast else float("inf")}
 
 
 # ----------------------------------------------------------------------------

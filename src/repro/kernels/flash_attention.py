@@ -1,12 +1,19 @@
-"""Flash attention (online softmax) Pallas kernel, causal + GQA.
+"""Flash attention (online softmax) Pallas kernel, causal + GQA, with a
+scalar-prefetch grid that skips out-of-diagonal K-block *loads*.
 
 HBM->VMEM tiling: the (block_q, head_dim) query tile stays resident while
 K/V tiles stream; running max/denominator/accumulator live in VMEM scratch
-and persist across the sequential K grid steps. GQA is handled in the K/V
-BlockSpec index maps (no materialized head repeat). Causal K-blocks past the
-diagonal are skipped via ``pl.when`` (their loads still stream; skipping the
-*loads* too is a documented future optimization — on TPU that needs a
-scalar-prefetch grid, out of scope here).
+and persist across the sequential K steps. GQA is handled in the K/V
+BlockSpec index maps (no materialized head repeat).
+
+Causality is a *grid* property here, not a ``pl.when`` guard: the grid's
+second dimension enumerates only the (q-block, k-block) pairs at or below
+the diagonal, with the pair decoded from scalar-prefetched ``qmap``/``kmap``
+arrays inside the index maps. Blocks past the diagonal are never part of
+the grid, so their K/V tiles are never streamed from HBM — the skipped-load
+optimization the seed kernel documented as out of scope. Block sizes default
+to the microbench-priced attention cost model
+(``core.autotune.choose_attn_block``).
 """
 
 from __future__ import annotations
@@ -22,9 +29,45 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                  scale: float, causal: bool, block_q: int, block_k: int):
-    qi, ki = pl.program_id(1), pl.program_id(2)
+def _largest_divisor(dim: int, upper: int) -> int:
+    for c in range(min(upper, dim), 0, -1):
+        if dim % c == 0:
+            return c
+    return dim
+
+
+def _lower_tri_maps(sq: int, skv: int, block_q: int, block_k: int,
+                    causal: bool):
+    """Enumerate visited (q-block, k-block) pairs, q-major.
+
+    Causal: for query block qi only the K blocks whose first column is
+    <= the block's last row (+ the skv-sq diagonal offset) are visited.
+    Returns int32 (qmap, kmap, last) where last flags each q row's final
+    K step (the online-softmax write-out point).
+    """
+    nq, nk = sq // block_q, skv // block_k
+    off = skv - sq                 # query i attends keys <= i + off
+    qmap, kmap, last = [], [], []
+    for qi in range(nq):
+        if causal:
+            last_row = qi * block_q + block_q - 1
+            kmax = min(max((last_row + off) // block_k + 1, 1), nk)
+        else:
+            kmax = nk
+        for ki in range(kmax):
+            qmap.append(qi)
+            kmap.append(ki)
+            last.append(1 if ki == kmax - 1 else 0)
+    return (np.asarray(qmap, np.int32), np.asarray(kmap, np.int32),
+            np.asarray(last, np.int32))
+
+
+def _flash_kernel(qmap_ref, kmap_ref, last_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  offset: int):
+    t = pl.program_id(1)
+    qi, ki = qmap_ref[t], kmap_ref[t]
 
     @pl.when(ki == 0)
     def _init():
@@ -32,45 +75,57 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    run = True
+    # Every grid step is a visited block (off-diagonal blocks never made it
+    # into the maps) — only the diagonal straddlers still need masking.
+    q = q_ref[0].astype(jnp.float32)                  # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
     if causal:
-        # Query block rows end at qi*bq + bq - 1; skip K blocks fully beyond.
-        run = ki * block_k <= qi * block_q + block_q - 1
+        rows = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        cols = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(cols <= rows + offset, s, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
 
-    @pl.when(run)
-    def _step():
-        q = q_ref[0].astype(jnp.float32)                  # (bq, d)
-        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
-        v = v_ref[0].astype(jnp.float32)
-        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-        if causal:
-            rows = qi * block_q + jax.lax.broadcasted_iota(
-                jnp.int32, (block_q, block_k), 0)
-            cols = ki * block_k + jax.lax.broadcasted_iota(
-                jnp.int32, (block_q, block_k), 1)
-            s = jnp.where(cols <= rows, s, NEG_INF)
-        m_prev = m_scr[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-        p = jnp.exp(s - m_new)
-        alpha = jnp.exp(m_prev - m_new)
-        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
-        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
-            p, v, preferred_element_type=jnp.float32)
-        m_scr[...] = m_new
-
-    @pl.when(ki == pl.num_programs(2) - 1)
+    @pl.when(last_ref[t] == 1)
     def _done():
         o_ref[0] = (acc_scr[...] / l_scr[...]).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
                                              "interpret"))
-def flash_attention(q, k, v, causal: bool = True, block_q: int = 256,
-                    block_k: int = 256, interpret: bool = False):
-    """q: (b, sq, h, d); k/v: (b, skv, kvh, d) -> (b, sq, h, d)."""
+def flash_attention(q, k, v, causal: bool = True, block_q=None,
+                    block_k=None, interpret: bool = False):
+    """q: (b, sq, h, d); k/v: (b, skv, kvh, d) -> (b, sq, h, d).
+
+    ``block_q``/``block_k`` default to the attention cost model's choice
+    (``core.autotune.choose_attn_block``), snapped to dividing sizes.
+    """
     b, sq, h, d = q.shape
     _, skv, kvh, _ = k.shape
     group = h // kvh
+    # Causal with sq > skv would leave early query rows with zero visitable
+    # keys (undefined softmax); no call site produces that shape.
+    assert not causal or skv >= sq, (sq, skv)
+    if block_q is None or block_k is None:
+        from repro.core import autotune
+        prob = autotune.AttnProblem(sq=sq, skv=skv, n_heads=h, head_dim=d,
+                                    batch=b, causal=causal,
+                                    in_bytes=q.dtype.itemsize)
+        chosen, _ = autotune.choose_attn_block(prob)
+        # Cost-model choices are 128-aligned; snap to dividing sizes so
+        # ragged sequence lengths stay launchable.
+        block_q = block_q or _largest_divisor(sq, chosen.block_q)
+        block_k = block_k or _largest_divisor(skv, chosen.block_k)
     block_q = min(block_q, sq)
     block_k = min(block_k, skv)
     assert sq % block_q == 0 and skv % block_k == 0
@@ -79,27 +134,36 @@ def flash_attention(q, k, v, causal: bool = True, block_q: int = 256,
     kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, skv, d)
     vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, skv, d)
 
-    def kv_index(bh, qi, ki):
-        # flattened q index bh = batch*h + head -> kv row batch*kvh + head//g
-        return ((bh // h) * kvh + (bh % h) // group, ki, 0)
+    qmap, kmap, last = _lower_tri_maps(sq, skv, block_q, block_k, causal)
 
-    out = pl.pallas_call(
-        functools.partial(_flash_kernel, scale=1.0 / np.sqrt(d),
-                          causal=causal, block_q=block_q, block_k=block_k),
-        grid=(b * h, sq // block_q, skv // block_k),
+    def q_index(bh, t, qm, km, lf):
+        return (bh, qm[t], 0)
+
+    def kv_index(bh, t, qm, km, lf):
+        # flattened q index bh = batch*h + head -> kv row batch*kvh + head//g
+        return ((bh // h) * kvh + (bh % h) // group, km[t], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b * h, len(qmap)),
         in_specs=[
-            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_q, d), q_index),
             pl.BlockSpec((1, block_k, d), kv_index),
             pl.BlockSpec((1, block_k, d), kv_index),
         ],
-        out_specs=pl.BlockSpec((1, block_q, d),
-                               lambda bh, qi, ki: (bh, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        out_specs=pl.BlockSpec((1, block_q, d), q_index),
         scratch_shapes=[
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=1.0 / np.sqrt(d),
+                          causal=causal, block_q=block_q, block_k=block_k,
+                          offset=skv - sq),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
         interpret=interpret,
-    )(qf, kf, vf)
+    )(jnp.asarray(qmap), jnp.asarray(kmap), jnp.asarray(last), qf, kf, vf)
     return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,130 @@
+"""GQA flash-decode Pallas kernel: single-token queries vs ragged KV caches.
+
+Decode attention in the serving engine is one (group, head_dim) query row per
+(slot, kv head) against that slot's KV cache prefix. The seed path attended
+over the full ``max_len`` cache every step; here the per-slot lengths ride in
+as scalar-prefetch arguments so the K/V BlockSpec index maps can clamp the
+streamed block to each slot's last valid block — grid steps past a slot's
+length re-map to the block already resident in VMEM, so on TPU no fresh DMA
+is issued and ``pl.when`` skips the compute. Decode attention cost becomes
+O(actual context) instead of O(max_len).
+
+Layout: the (slot, kv head) pair is flattened into grid dim 0, exactly like
+``flash_attention``'s (batch, head) flattening; GQA needs no materialized
+head repeat because the q rows for one kv head are contiguous.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attention import _largest_divisor
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   scale: float, block_k: int, kvh: int):
+    bh, ki = pl.program_id(0), pl.program_id(1)
+    length = lens_ref[bh // kvh]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Blocks at/after the slot's length are load-skipped by the index map;
+    # skip their compute too.
+    @pl.when(ki * block_k < length)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                  # (group, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == pl.num_programs(1) - 1)
+    def _done():
+        # Zero-length slots (freed engine slots) produce zeros, not NaN.
+        denom = jnp.where(l_scr[...] > 0.0, l_scr[...], 1.0)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode(q, k, v, lengths, block_k=None,
+                 interpret: bool = False):
+    """q: (b, h, d); k/v: (b, max_len, kvh, d); lengths: (b,) -> (b, h, d).
+
+    ``lengths[i]`` is the number of valid KV rows for slot i (0 allowed:
+    the output row is zeros). Only ``ceil(lengths[i] / block_k)`` K/V
+    blocks are streamed for slot i. ``block_k=None`` asks the attention
+    cost model (``core.autotune.choose_attn_block``), snapped to a
+    dividing size.
+    """
+    b, h, d = q.shape
+    _, max_len, kvh, _ = k.shape
+    group = h // kvh
+    assert group * kvh == h, (h, kvh)
+    if block_k is None:
+        from repro.core import autotune
+        prob = autotune.AttnProblem(sq=group, skv=max_len, n_heads=kvh,
+                                    head_dim=d, batch=b, causal=False,
+                                    in_bytes=q.dtype.itemsize)
+        chosen, _ = autotune.choose_attn_block(prob)
+        block_k = _largest_divisor(max_len, chosen.block_k)
+    block_k = min(block_k, max_len)
+    assert max_len % block_k == 0, (max_len, block_k)
+    nk = max_len // block_k
+
+    qf = q.reshape(b * kvh, group, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, max_len, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, max_len, d)
+    lengths = lengths.astype(jnp.int32)
+
+    def kv_index(bh, ki, lens):
+        # Clamp to the slot's last valid block: out-of-range grid steps
+        # re-visit it, so the pipeline issues no new copy.
+        last = jnp.maximum(lens[bh // kvh] - 1, 0) // block_k
+        return (bh, jnp.minimum(ki, last), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * kvh, nk),
+        in_specs=[
+            pl.BlockSpec((1, group, d), lambda bh, ki, lens: (bh, 0, 0)),
+            pl.BlockSpec((1, block_k, d), kv_index),
+            pl.BlockSpec((1, block_k, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, group, d),
+                               lambda bh, ki, lens: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=1.0 / np.sqrt(d),
+                          block_k=block_k, kvh=kvh),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * kvh, group, d), q.dtype),
+        interpret=interpret,
+    )(lengths, qf, kf, vf)
+    return out.reshape(b, h, d)

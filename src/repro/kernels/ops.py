@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.core import autotune
 from repro.kernels import flash_attention as _flash
+from repro.kernels import flash_decode as _flash_decode
 from repro.kernels import gemm as _gemm
 from repro.kernels import pchase_probe as _pchase
 from repro.kernels import ssd_scan as _ssd
@@ -39,19 +40,30 @@ def gemm(x, y, block=None):
     return _gemm.gemm(x, y, bm=bm, bk=bk, bn=bn, interpret=_interpret())
 
 
-def _largest_divisor(dim: int, upper: int) -> int:
-    for c in range(min(upper, dim), 0, -1):
-        if dim % c == 0:
-            return c
-    return dim
+_largest_divisor = _flash._largest_divisor
 
 
-def flash_attention(q, k, v, causal: bool = True, block_q: int = 256,
-                    block_k: int = 256):
-    block_q = _largest_divisor(q.shape[1], block_q)
-    block_k = _largest_divisor(k.shape[1], block_k)
+def flash_attention(q, k, v, causal: bool = True, block_q=None,
+                    block_k=None):
+    # block defaults (None) resolve inside the kernel via the attention
+    # cost model; explicit blocks just snap to dividing sizes here.
+    if block_q is not None:
+        block_q = _largest_divisor(q.shape[1], block_q)
+    if block_k is not None:
+        block_k = _largest_divisor(k.shape[1], block_k)
     return _flash.flash_attention(q, k, v, causal=causal, block_q=block_q,
                                   block_k=block_k, interpret=_interpret())
+
+
+def flash_decode(q, k, v, lengths, block_k=None):
+    """Single-token GQA decode: q (b, h, d) vs ragged (b, max_len, kvh, d).
+
+    ``block_k=None`` resolves through the attention cost model inside the
+    kernel wrapper."""
+    if block_k is not None:
+        block_k = _largest_divisor(k.shape[1], block_k)
+    return _flash_decode.flash_decode(q, k, v, lengths, block_k=block_k,
+                                      interpret=_interpret())
 
 
 def ssd_scan(x, a_log, b, c, chunk: int = 128):

@@ -28,6 +28,24 @@ def flash_attention(q, k, v, causal: bool = True):
     return out.reshape(b, sq, h, d).astype(q.dtype)
 
 
+def flash_decode(q, k, v, lengths):
+    """Ragged single-token GQA decode: slot i attends its first lengths[i]
+    cache rows; zero-length slots produce zeros (freed engine slots)."""
+    b, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    group = h // kvh
+    qg = q.reshape(b, kvh, group, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, kf) / np.sqrt(d)
+    valid = jnp.arange(skv)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, vf)
+    out = jnp.where((lengths > 0)[:, None, None, None], out, 0.0)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
 def ssd_scan(x, a_log, b, c):
     """Sequential SSD recurrence (same as models.mamba.ssd_reference)."""
     from repro.models.mamba import ssd_reference

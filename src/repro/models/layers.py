@@ -224,7 +224,18 @@ def attention_apply(params: Params, cfg: AttnConfig, x, positions=None,
         ck = sharding.shard(ck, "batch", "cache_seq", "kv_heads", "head_dim")
         cv = sharding.shard(cv, "batch", "cache_seq", "kv_heads", "head_dim")
         new_cache = {"k": ck, "v": cv, "index": idx + s}
-        if cfg.causal:
+        if use_flash and s == 1 and not cfg.expand_kv:
+            # Flash decode: the single query at position idx attends exactly
+            # the first idx+1 cache rows (causal and kv_lengths masks agree
+            # at s == 1); per-slot lengths ride in as scalar prefetch so only
+            # each slot's live K/V blocks stream from HBM.
+            from repro.kernels import ops as kernel_ops
+            lengths = (idx + 1 if idx.ndim == 1
+                       else jnp.full((b,), idx + 1, jnp.int32))
+            out = kernel_ops.flash_decode(
+                q[:, 0], ck.astype(q.dtype), cv.astype(q.dtype),
+                lengths)[:, None]
+        elif cfg.causal:
             # Chunked prefill must stay causal *within* the chunk: query
             # idx+i may only see cache positions <= idx+i.
             skv = ck.shape[1]

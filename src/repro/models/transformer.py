@@ -333,6 +333,35 @@ def caches_index(caches) -> Any:
     return idx.reshape(-1)[0] if hasattr(idx, "reshape") else idx
 
 
+def cache_lengths(caches) -> Any:
+    """Per-slot valid KV lengths, shape (batch,).
+
+    With ``per_slot_index=True`` caches the index leaf is (periods, batch)
+    and every period carries the same value; scalar-index caches
+    ((periods,)-shaped leaf) broadcast their position over the batch read
+    off a data leaf. This is the lengths vector the flash-decode kernel
+    scalar-prefetches.
+    """
+    c0 = caches[0]
+    idx = c0["index"]
+    if idx.ndim == 2:
+        return idx[0]
+    batch = next(v for k, v in c0.items() if k != "index").shape[1]
+    return jnp.full((batch,), idx[0], idx.dtype)
+
+
+def set_cache_lengths(caches, lengths) -> List[Any]:
+    """Overwrite every layer's write position (e.g. after a padded bucketed
+    prefill, where the true prompt length is shorter than the bucket)."""
+    out = []
+    for c in caches:
+        c = dict(c)
+        c["index"] = jnp.broadcast_to(
+            jnp.asarray(lengths, c["index"].dtype), c["index"].shape)
+        out.append(c)
+    return out
+
+
 def init_caches(cfg: ModelConfig, batch: int, max_len: int,
                 dtype=None, per_slot_index: bool = False) -> List[Any]:
     """Stacked decode caches aligned with pattern positions.

@@ -3,6 +3,23 @@
 ``make_serve_step`` builds the jitted one-token decode step the dry-run
 lowers for the ``decode_32k`` / ``long_500k`` cells: one new token against a
 KV/SSM cache of the cell's sequence length, caches donated in-place.
+
+``ServingEngine`` is the decode fast path around it (see README.md here):
+
+  * **Bucketed, jitted prefill** — prompts pad right to power-of-two
+    buckets, so each bucket traces and compiles exactly once instead of
+    once per distinct prompt length. The padded K/V rows are never
+    attended (per-slot write positions are reset to the true length) and
+    are overwritten as decode advances.
+  * **Fused slot install** — the row caches produced by prefill scatter
+    into the engine's batch caches inside the same jitted executable
+    (one ``dynamic_update_slice`` per leaf, caches donated), not as a
+    per-leaf host loop.
+  * **Donated decode** — ``tick`` threads the engine caches through the
+    decode step with buffer donation, so the cache never exists twice.
+  * **Per-slot lengths** — caches carry one write position per slot;
+    with ``use_flash`` the flash-decode kernel scalar-prefetches them and
+    streams only each slot's live K/V blocks (O(context), not O(max_len)).
 """
 
 from __future__ import annotations
@@ -23,6 +40,8 @@ class ServeConfig:
     batch: int
     temperature: float = 0.0     # 0 -> greedy
     eos_id: int = 1
+    seed: int = 0                # sampling PRNG (temperature > 0)
+    min_bucket: int = 8          # smallest prefill bucket (power of two)
 
 
 def prefill(params, cfg: T.ModelConfig, tokens, caches,
@@ -42,21 +61,39 @@ def decode_step(params, cfg: T.ModelConfig, last_tokens, caches,
     return logits[:, -1], caches
 
 
-def make_serve_step(cfg: T.ModelConfig, donate: bool = True) -> Callable:
-    """Jitted greedy decode step (the dry-run's serve_step)."""
+def sampler(temperature: float) -> Callable:
+    """logits (..., vocab) -> token ids; greedy at temperature 0."""
+    if temperature == 0.0:
+        return lambda logits, key: jnp.argmax(logits, -1).astype(jnp.int32)
 
-    def step(params, last_tokens, caches, frontend_embeds=None):
+    def sample(logits, key):
+        return jax.random.categorical(
+            key, logits.astype(jnp.float32) / temperature, axis=-1
+        ).astype(jnp.int32)
+
+    return sample
+
+
+def make_serve_step(cfg: T.ModelConfig, donate: bool = True,
+                    temperature: float = 0.0) -> Callable:
+    """Jitted decode step (the dry-run's serve_step), caches donated."""
+    pick = sampler(temperature)
+
+    def step(params, last_tokens, caches, frontend_embeds=None, key=None):
         logits, caches = decode_step(params, cfg, last_tokens, caches,
                                      frontend_embeds=frontend_embeds)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return nxt, caches
+        return pick(logits, key), caches
 
     return jax.jit(step, donate_argnums=(2,) if donate else ())
 
 
 def greedy_generate(params, cfg: T.ModelConfig, prompt, max_new: int,
                     max_len: Optional[int] = None, frontend_embeds=None):
-    """Reference generation loop (tests compare engine output to this)."""
+    """Reference generation loop (tests compare engine output to this).
+
+    The decode step donates its caches: each iteration rebinds ``caches``
+    to the step's output, so the donated buffer is never read again.
+    """
     b, s = prompt.shape
     max_len = max_len or (s + max_new)
     caches = T.init_caches(cfg, b, max_len)
@@ -64,7 +101,7 @@ def greedy_generate(params, cfg: T.ModelConfig, prompt, max_new: int,
                              frontend_embeds=frontend_embeds)
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     out = [tok]
-    step = make_serve_step(cfg, donate=False)
+    step = make_serve_step(cfg, donate=True)
     for _ in range(max_new - 1):
         tok, caches = step(params, tok, caches,
                            frontend_embeds=frontend_embeds)
@@ -85,8 +122,9 @@ class ServingEngine:
     """Slot-based continuous batching over a fixed decode batch.
 
     Requests join free slots as they arrive; each engine tick decodes one
-    token for every active slot. Finished slots free immediately — the
-    batched-requests serving path of deliverable (b).
+    token for every active slot. Finished slots free immediately and their
+    ``last_tok`` entry resets to 0 so a stale token can never collide with
+    ``eos_id`` on a later tick.
     """
 
     def __init__(self, params, cfg: T.ModelConfig, serve_cfg: ServeConfig):
@@ -99,36 +137,126 @@ class ServingEngine:
         self.queue: List[Request] = []
         self.last_tok = jnp.zeros((serve_cfg.batch,), jnp.int32)
         self.finished: Dict[int, List[int]] = {}
-        self._step = make_serve_step(cfg, donate=False)
+        self._key = jax.random.PRNGKey(serve_cfg.seed)
+        # Bucketing pads the prompt on the right; that only composes with
+        # attention layers (masked K/V). SSM/hybrid stacks carry recurrent
+        # state through every position, so they prefill at exact length
+        # (still jitted + fused — just one executable per distinct length).
+        self._bucketed = all(k in ("attn", "cross") for k in cfg.pattern) \
+            and cfg.encoder is None and not cfg.n_frontend_tokens
+        self._prefill_fns: Dict[int, Callable] = {}
+        self.prefill_traces: Dict[int, int] = {}
+        self.decode_traces = 0
+        self._step = self._make_decode_step()
+
+    # -- jitted executables ---------------------------------------------------
+
+    def _make_decode_step(self) -> Callable:
+        pick = sampler(self.scfg.temperature)
+        cfg = self.cfg
+
+        def step(params, last_tokens, caches, key):
+            self.decode_traces += 1          # runs at trace time only
+            logits, caches = decode_step(params, cfg, last_tokens, caches)
+            return pick(logits, key), caches
+
+        return jax.jit(step, donate_argnums=(2,))
+
+    def bucket_for(self, prompt_len: int) -> int:
+        if not self._bucketed:
+            return prompt_len
+        b = self.scfg.min_bucket
+        while b < prompt_len:
+            b *= 2
+        return min(b, self.scfg.max_len)
+
+    def _prefill_fn(self, bucket: int) -> Callable:
+        """One jitted prefill-install-sample executable per bucket."""
+        fn = self._prefill_fns.get(bucket)
+        if fn is not None:
+            return fn
+        cfg, scfg = self.cfg, self.scfg
+        pick = sampler(scfg.temperature)
+
+        def prefill_into_slot(params, tokens, true_len, slot, caches, key):
+            # tokens: (1, bucket) right-padded prompt.
+            self.prefill_traces[bucket] = \
+                self.prefill_traces.get(bucket, 0) + 1   # trace-time only
+            row = T.init_caches(cfg, 1, scfg.max_len, per_slot_index=True)
+            logits, row, _ = T.forward(params, cfg, tokens, caches=row)
+            last = jax.lax.dynamic_index_in_dim(logits, true_len - 1,
+                                                axis=1, keepdims=False)
+            # Padded K/V rows sit at positions >= true_len: resetting the
+            # per-slot write position masks them out of every future step
+            # and decode overwrites them in place.
+            row = T.set_cache_lengths(row, true_len)
+
+            def install(f, r):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    f, r.astype(f.dtype), slot, axis=1)
+
+            caches = [jax.tree.map(install, f, r)
+                      for f, r in zip(caches, row)]
+            return pick(last[0], key), caches
+
+        fn = jax.jit(prefill_into_slot, donate_argnums=(4,))
+        self._prefill_fns[bucket] = fn
+        return fn
+
+    # -- request lifecycle ----------------------------------------------------
 
     def submit(self, req: Request):
         self.queue.append(req)
+
+    def context_lengths(self) -> np.ndarray:
+        """Per-slot live KV length (prompt + generated so far), shape
+        (batch,) — the vector the flash-decode kernel scalar-prefetches."""
+        return np.asarray(T.cache_lengths(self.caches))
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _record(self, i: int, req: Request, tok: int) -> bool:
+        """Append ``tok``; finish + free the slot on EOS/max_new.
+
+        ``last_tok`` needs no reset here: tick's rebuild parks finished and
+        empty slots at 0, and a slot freed during admission already was 0
+        (the invariant: free slots always read 0).
+        """
+        req.generated.append(tok)
+        if tok == self.scfg.eos_id or len(req.generated) >= req.max_new:
+            req.done = True
+            self.finished[req.rid] = req.generated
+            self.slots[i] = None
+            # Zero the slot's per-slot write position so flash decode stops
+            # streaming the dead context (lengths drift back up by one per
+            # tick until the slot is re-admitted, but never to ~max_len).
+            self.caches = [
+                dict(c, index=c["index"].at[:, i].set(0))
+                for c in self.caches
+            ]
+            return True
+        return False
 
     def _admit(self):
         for i, slot in enumerate(self.slots):
             if slot is None and self.queue:
                 req = self.queue.pop(0)
+                prompt = np.asarray(req.prompt, np.int32)
+                bucket = self.bucket_for(len(prompt))
+                assert len(prompt) <= bucket <= self.scfg.max_len, \
+                    (len(prompt), bucket, self.scfg.max_len)
+                padded = np.zeros((1, bucket), np.int32)
+                padded[0, :len(prompt)] = prompt
+                tok, self.caches = self._prefill_fn(bucket)(
+                    self.params, jnp.asarray(padded),
+                    jnp.int32(len(prompt)), jnp.int32(i), self.caches,
+                    self._next_key())
                 self.slots[i] = req
-                # Per-slot prefill: single-row prompt fill at slot i.
-                row = jnp.asarray(req.prompt)[None]
-                row_caches = T.init_caches(self.cfg, 1, self.scfg.max_len,
-                                           per_slot_index=True)
-                logits, row_caches = prefill(self.params, self.cfg, row,
-                                             row_caches)
-                self._write_slot(i, row_caches)
-                tok = int(np.asarray(jnp.argmax(logits, -1))[0])
-                req.generated.append(tok)
-                self.last_tok = self.last_tok.at[i].set(tok)
-
-    def _write_slot(self, i: int, row_caches):
-        # Every cache leaf is (periods, batch, ...) — including the per-slot
-        # index — so one slice-update on axis 1 installs the row.
-        def write(f, r):
-            return jax.lax.dynamic_update_slice_in_dim(
-                f, r.astype(f.dtype), i, axis=1)
-
-        self.caches = [jax.tree.map(write, f, r)
-                       for f, r in zip(self.caches, row_caches)]
+                tok = int(np.asarray(tok))
+                if not self._record(i, req, tok):
+                    self.last_tok = self.last_tok.at[i].set(tok)
 
     def tick(self) -> int:
         """Admit + one decode step for all active slots; returns #active."""
@@ -136,15 +264,17 @@ class ServingEngine:
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return 0
-        nxt, self.caches = self._step(self.params, self.last_tok, self.caches)
-        nxt_host = np.asarray(nxt)
-        for i in active:
-            req = self.slots[i]
-            tok = int(nxt_host[i])
-            req.generated.append(tok)
-            if tok == self.scfg.eos_id or len(req.generated) >= req.max_new:
-                self.finished[req.rid] = req.generated
-                self.slots[i] = None
+        nxt, self.caches = self._step(self.params, self.last_tok,
+                                      self.caches, self._next_key())
+        nxt_host = np.asarray(nxt).copy()
+        active_set = set(active)
+        for i in range(self.scfg.batch):
+            if i in active_set:
+                if not self._record(i, self.slots[i], int(nxt_host[i])):
+                    continue
+            # Freed or empty slot: park the fed-back token at 0 so stale
+            # output can't alias eos_id (and decodes stay deterministic).
+            nxt_host[i] = 0
         self.last_tok = jnp.asarray(nxt_host, jnp.int32)
         return len(active)
 

@@ -1,0 +1,106 @@
+"""Attention cost model: monotonicity + feasibility properties, and the
+persistent tuning cache round-trip."""
+
+import dataclasses
+import json
+import os
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import autotune, hwmodel
+
+
+def _problem(sq, skv, causal=True, heads=8, d=128, batch=1):
+    return autotune.AttnProblem(sq=sq, skv=skv, n_heads=heads, head_dim=d,
+                                batch=batch, causal=causal)
+
+
+@given(skv=st.sampled_from([512, 1024, 2048, 4096, 8192]),
+       causal=st.sampled_from([True, False]))
+@settings(max_examples=10, deadline=None)
+def test_attn_cost_monotone_in_kv_length(skv, causal):
+    c = autotune.AttnBlock(128, 128)
+    t1, _ = autotune.attn_cost(_problem(512, skv, causal), c)
+    t2, _ = autotune.attn_cost(_problem(512, 2 * skv, causal), c)
+    assert t2 > t1
+
+
+@given(sq=st.sampled_from([256, 512, 1024, 2048]))
+@settings(max_examples=8, deadline=None)
+def test_attn_cost_monotone_in_query_length(sq):
+    c = autotune.AttnBlock(128, 128)
+    t1, _ = autotune.attn_cost(_problem(sq, 4096), c)
+    t2, _ = autotune.attn_cost(_problem(2 * sq, 4096), c)
+    assert t2 > t1
+
+
+@given(batch=st.integers(1, 8), heads=st.sampled_from([4, 8, 16]))
+@settings(max_examples=8, deadline=None)
+def test_attn_cost_monotone_in_rows(batch, heads):
+    c = autotune.AttnBlock(128, 128)
+    p = _problem(512, 2048, heads=heads, batch=batch)
+    t1, _ = autotune.attn_cost(p, c)
+    t2, _ = autotune.attn_cost(dataclasses.replace(p, batch=2 * batch), c)
+    assert t2 > t1
+
+
+@given(sq=st.sampled_from([1024, 2048, 4096]),
+       bk=st.sampled_from([128, 256, 512]))
+@settings(max_examples=8, deadline=None)
+def test_causal_skips_work_and_traffic(sq, bk):
+    """The skipped-load grid visits ~half the blocks of the full grid."""
+    c = autotune.AttnBlock(128, bk)
+    _, terms_c = autotune.attn_cost(_problem(sq, sq, causal=True), c)
+    _, terms_f = autotune.attn_cost(_problem(sq, sq, causal=False), c)
+    assert terms_c["visited_blocks"] < terms_f["visited_blocks"]
+    assert terms_c["traffic_bytes"] < terms_f["traffic_bytes"]
+    # Block-granular triangle: between half and half-plus-one-diagonal.
+    frac = terms_c["visited_blocks"] / terms_f["visited_blocks"]
+    assert 0.5 <= frac <= 0.5 + bk / sq + 1e-9
+
+
+@given(sq=st.sampled_from([256, 1024, 4096, 16384]),
+       causal=st.sampled_from([True, False]))
+@settings(max_examples=10, deadline=None)
+def test_choose_attn_block_beats_or_ties_naive(sq, causal):
+    p = _problem(sq, sq, causal)
+    cfg, terms = autotune.choose_attn_block(p, use_cache=False)
+    t_naive, _ = autotune.attn_cost(p, autotune.NAIVE_ATTN_BLOCK)
+    assert terms["time_s"] <= t_naive + 1e-12
+    budget = hwmodel.DEFAULT_TPU.vmem_bytes * 0.5
+    assert cfg.vmem_bytes(p) <= budget
+
+
+def test_candidates_respect_vmem_budget():
+    p = _problem(8192, 8192)
+    for c in autotune.candidate_attn_blocks(p):
+        assert c.vmem_bytes(p) <= hwmodel.DEFAULT_TPU.vmem_bytes * 0.5
+
+
+def test_decode_speedup_gt_one_for_ragged_contexts():
+    out = autotune.decode_attn_speedup(
+        32768, [512, 4096, 16384, 32768], n_heads=32, n_kv_heads=8,
+        head_dim=128)
+    assert out["speedup"] > 1.0
+    full = autotune.decode_attn_speedup(
+        32768, [32768, 32768], n_heads=32, n_kv_heads=8, head_dim=128)
+    assert full["speedup"] == pytest.approx(1.0)
+
+
+def test_tuning_cache_roundtrip(tmp_path, monkeypatch):
+    path = tmp_path / "cache.json"
+    monkeypatch.setattr(autotune, "TUNING_CACHE_PATH", str(path))
+    monkeypatch.setattr(autotune, "_tuning_cache", None)
+    p = _problem(1024, 1024)
+    cfg, terms = autotune.choose_attn_block(p)
+    assert "cached" not in terms
+    assert os.path.exists(path)
+    stored = json.load(open(path))
+    assert len(stored) == 1
+    # Second call (fresh in-memory cache) serves the persisted entry.
+    monkeypatch.setattr(autotune, "_tuning_cache", None)
+    cfg2, terms2 = autotune.choose_attn_block(p)
+    assert cfg2 == cfg
+    assert terms2["cached"] is True
+    assert terms2["time_s"] == pytest.approx(terms["time_s"])

@@ -52,6 +52,34 @@ def test_flash_attention_gqa_sweep(h, kvh, causal):
                                rtol=2e-4, atol=2e-4)
 
 
+def test_flash_attention_causal_cross_length():
+    """sq != skv causal (chunked prefill shape): the skipped-load grid must
+    honor the skv-sq diagonal offset."""
+    rng = np.random.RandomState(6)
+    q = jnp.asarray(rng.randn(1, 32, 4, 16), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 96, 2, 16), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 96, 2, 16), jnp.float32)
+    out = flash_raw(q, k, v, causal=True, block_q=16, block_k=16,
+                    interpret=True)
+    expect = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("sq", [256, 192, 96])
+def test_flash_attention_autotuned_blocks(sq):
+    """Default (None) blocks resolve through the attention cost model and
+    snap to dividing sizes for lengths the 128-aligned candidates miss."""
+    rng = np.random.RandomState(7)
+    q = jnp.asarray(rng.randn(1, sq, 4, 32), jnp.float32)
+    k = jnp.asarray(rng.randn(1, sq, 2, 32), jnp.float32)
+    v = jnp.asarray(rng.randn(1, sq, 2, 32), jnp.float32)
+    out = flash_raw(q, k, v, causal=True, interpret=True)
+    expect = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4)
+
+
 def test_flash_attention_bf16():
     rng = np.random.RandomState(3)
     q = jnp.asarray(rng.randn(1, 64, 2, 16), jnp.bfloat16)

@@ -69,6 +69,158 @@ def test_engine_mixed_prompt_lengths(model):
         assert got[rid] == np.asarray(ref[0]).tolist(), rid
 
 
+def test_engine_staggered_admission_matches_reference(model):
+    """Requests arriving mid-stream (slot churn + mixed buckets) produce
+    exactly the reference token streams."""
+    cfg, params = model
+    rng = np.random.RandomState(7)
+    prompts = {rid: rng.randint(2, cfg.vocab, size=n).astype(np.int32)
+               for rid, n in enumerate((3, 6, 7, 11))}
+    eng = ServingEngine(params, cfg, ServeConfig(max_len=32, batch=2,
+                                                 eos_id=-1))
+    eng.submit(Request(rid=0, prompt=prompts[0], max_new=5))
+    eng.submit(Request(rid=1, prompt=prompts[1], max_new=5))
+    eng.tick()
+    eng.tick()
+    eng.submit(Request(rid=2, prompt=prompts[2], max_new=5))
+    eng.tick()
+    eng.submit(Request(rid=3, prompt=prompts[3], max_new=5))
+    got = eng.run_until_drained()
+    for rid, pr in prompts.items():
+        ref = greedy_generate(params, cfg, jnp.asarray(pr)[None], 5,
+                              max_len=32)
+        assert got[rid] == np.asarray(ref[0]).tolist(), rid
+
+
+def test_engine_compiles_one_prefill_executable_per_bucket(model):
+    """Prompts pad to power-of-two buckets; every bucket traces exactly
+    once no matter how many prompt lengths map into it."""
+    cfg, params = model
+    rng = np.random.RandomState(8)
+    eng = ServingEngine(params, cfg, ServeConfig(max_len=32, batch=2,
+                                                 eos_id=-1))
+    for rid, n in enumerate((3, 4, 5, 6, 7, 8, 9, 11, 13, 15)):
+        eng.submit(Request(rid=rid,
+                           prompt=rng.randint(2, cfg.vocab, n)
+                           .astype(np.int32), max_new=3))
+    eng.run_until_drained()
+    # 10 distinct prompt lengths, two buckets (8 and 16), one trace each.
+    assert set(eng.prefill_traces) == {8, 16}
+    assert all(n == 1 for n in eng.prefill_traces.values()), \
+        eng.prefill_traces
+    assert eng.decode_traces == 1
+
+
+def test_engine_bucket_for_powers_of_two(model):
+    cfg, params = model
+    eng = ServingEngine(params, cfg, ServeConfig(max_len=32, batch=1))
+    assert [eng.bucket_for(n) for n in (1, 8, 9, 16, 17, 30)] == \
+        [8, 8, 16, 16, 32, 32]
+
+
+def test_engine_eos_frees_slot_and_clears_last_tok(model):
+    """A finished slot must not feed its stale token back into decode —
+    and a stale token equal to eos_id must not re-finish anything."""
+    cfg, params = model
+    rng = np.random.RandomState(9)
+    prompt = rng.randint(2, cfg.vocab, 5).astype(np.int32)
+    ref = np.asarray(greedy_generate(params, cfg, jnp.asarray(prompt)[None],
+                                     6, max_len=32)[0]).tolist()
+    eos = ref[2]                   # force EOS three tokens in
+    long_prompt = rng.randint(2, cfg.vocab, 6).astype(np.int32)
+    eng = ServingEngine(params, cfg, ServeConfig(max_len=32, batch=2,
+                                                 eos_id=eos))
+    eng.submit(Request(rid=0, prompt=prompt, max_new=6))
+    eng.submit(Request(rid=1, prompt=long_prompt, max_new=10))
+    got = eng.run_until_drained()
+    assert got[0] == ref[:3]       # truncated at the EOS token
+    assert int(np.asarray(eng.last_tok)[0]) == 0   # freed slot parked at 0
+    assert len(got[1]) == 10       # neighbor unaffected by the stale slot
+
+
+def test_engine_tracks_per_slot_context_lengths(model):
+    """cache_lengths threads the per-slot write positions out of the
+    stacked caches: prompt length + tokens decoded so far, per slot."""
+    cfg, params = model
+    rng = np.random.RandomState(12)
+    p0 = rng.randint(2, cfg.vocab, 4).astype(np.int32)
+    p1 = rng.randint(2, cfg.vocab, 9).astype(np.int32)
+    eng = ServingEngine(params, cfg, ServeConfig(max_len=32, batch=2,
+                                                 eos_id=-1))
+    eng.submit(Request(rid=0, prompt=p0, max_new=5))
+    eng.submit(Request(rid=1, prompt=p1, max_new=5))
+    eng.tick()     # prefill both + 1 decoded token
+    np.testing.assert_array_equal(eng.context_lengths(), [5, 10])
+    eng.tick()
+    np.testing.assert_array_equal(eng.context_lengths(), [6, 11])
+
+
+def test_cache_lengths_shapes_for_both_index_kinds(model):
+    cfg, params = model
+    per_slot = T.init_caches(cfg, 3, 8, per_slot_index=True)
+    assert T.cache_lengths(per_slot).shape == (3,)
+    scalar = T.init_caches(cfg, 3, 8)
+    got = np.asarray(T.cache_lengths(scalar))
+    np.testing.assert_array_equal(got, [0, 0, 0])
+
+
+def test_engine_freed_slot_resets_cache_length(model):
+    """A finished slot's per-slot write position resets, so flash decode
+    stops streaming the dead context (length then drifts by one per tick
+    until re-admission, never back to the stale value)."""
+    cfg, params = model
+    rng = np.random.RandomState(13)
+    eng = ServingEngine(params, cfg, ServeConfig(max_len=32, batch=2,
+                                                 eos_id=-1))
+    eng.submit(Request(rid=0, prompt=rng.randint(2, cfg.vocab, 6)
+                       .astype(np.int32), max_new=2))
+    eng.submit(Request(rid=1, prompt=rng.randint(2, cfg.vocab, 4)
+                       .astype(np.int32), max_new=8))
+    eng.tick()     # rid=0 hits max_new and frees; rid=1 keeps going
+    assert 0 in eng.finished and eng.slots[0] is None
+    np.testing.assert_array_equal(eng.context_lengths(), [0, 5])
+    eng.tick()
+    np.testing.assert_array_equal(eng.context_lengths(), [1, 6])
+
+
+def test_engine_temperature_sampling_smoke(model):
+    cfg, params = model
+    rng = np.random.RandomState(10)
+    eng = ServingEngine(params, cfg, ServeConfig(max_len=32, batch=2,
+                                                 eos_id=-1, temperature=0.7,
+                                                 seed=3))
+    for rid in range(3):
+        eng.submit(Request(rid=rid,
+                           prompt=rng.randint(2, cfg.vocab, 5)
+                           .astype(np.int32), max_new=4))
+    got = eng.run_until_drained()
+    assert set(got) == {0, 1, 2}
+    for toks in got.values():
+        assert len(toks) == 4
+        assert all(0 <= t < cfg.vocab for t in toks)
+
+
+def test_engine_flash_decode_path_matches_reference(model):
+    """use_flash threads the flash-decode kernel through engine decode;
+    token streams must stay identical to the sdpa reference."""
+    import dataclasses
+
+    cfg, params = model
+    fcfg = dataclasses.replace(cfg, use_flash=True)
+    rng = np.random.RandomState(11)
+    prompts = {0: rng.randint(2, cfg.vocab, 4).astype(np.int32),
+               1: rng.randint(2, cfg.vocab, 9).astype(np.int32)}
+    eng = ServingEngine(params, fcfg, ServeConfig(max_len=32, batch=2,
+                                                  eos_id=-1))
+    for rid, pr in prompts.items():
+        eng.submit(Request(rid=rid, prompt=pr, max_new=4))
+    got = eng.run_until_drained()
+    for rid, pr in prompts.items():
+        ref = greedy_generate(params, cfg, jnp.asarray(pr)[None], 4,
+                              max_len=32)
+        assert got[rid] == np.asarray(ref[0]).tolist(), rid
+
+
 def test_mamba_generation_consistency():
     cfg = configs.get_smoke("mamba2-370m")
     params = T.init_params(jax.random.PRNGKey(2), cfg)
