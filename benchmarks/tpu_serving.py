@@ -12,6 +12,13 @@ Two kinds of numbers:
   This is the speedup the skipped-load machinery buys, reportable even
   off-TPU.
 
+Paged vs contiguous rides in both: the measured run repeats through a
+paged engine (same prompts, half-size page pool) and reports the HBM rows
+each cache layout actually holds; the modeled ``decode_32k`` cell prices
+the paged variant (page-table-lookup overhead, reservation ratio) over a
+long-tailed stagger of slot lengths — the serving distribution where flat
+``slots * max_len`` reservations waste the most.
+
   PYTHONPATH=src python -m benchmarks.tpu_serving --out BENCH_serving.json
 """
 
@@ -33,16 +40,14 @@ ARCH = "qwen3-4b"
 N_REQUESTS = 6
 MAX_NEW = 8
 MAX_LEN = 64
+BATCH = 4
 
 
-def _measured() -> dict:
-    cfg = configs.get_smoke(ARCH)
-    params = T.init_params(jax.random.PRNGKey(0), cfg)
-    rng = np.random.RandomState(0)
-    prompts = [rng.randint(2, cfg.vocab, size=rng.randint(4, 17))
-               .astype(np.int32) for _ in range(N_REQUESTS)]
-    eng = ServingEngine(params, cfg,
-                        ServeConfig(max_len=MAX_LEN, batch=4, eos_id=-1))
+PAGE_SIZE = 8           # smoke-model pages (production: 128+, MXU-aligned)
+
+
+def _run_engine(params, cfg, prompts, serve_cfg: ServeConfig) -> dict:
+    eng = ServingEngine(params, cfg, serve_cfg)
     # Warm every executable the timed run will hit (compile time is not
     # serving throughput): one prompt per bucket, plus the decode step.
     buckets = {eng.bucket_for(len(p)) for p in prompts}
@@ -50,6 +55,10 @@ def _measured() -> dict:
         eng.submit(Request(rid=-1 - wid,
                            prompt=np.resize(prompts[0], b), max_new=2))
     eng.run_until_drained()
+    if eng.pool is not None:
+        # Report the timed run's pool pressure, not the warm-up's.
+        eng.pool.high_water = eng.pool.pages_in_use
+        eng.admission_rejections = 0
 
     t0 = time.perf_counter()
     for rid, p in enumerate(prompts):
@@ -58,14 +67,42 @@ def _measured() -> dict:
     dt = time.perf_counter() - t0
     prefill_toks = sum(len(p) for p in prompts)
     decode_toks = sum(len(v) for rid, v in finished.items() if rid >= 0)
-    return {
+    out = {
         "prefill_tokens": prefill_toks,
         "decode_tokens": decode_toks,
         "wall_s": dt,
         "tokens_per_s": (prefill_toks + decode_toks) / dt,
         "prefill_executables": len(eng.prefill_traces),
         "prefill_buckets": sorted(eng.prefill_traces),
+        "cache_hbm_rows": T.cache_hbm_rows(eng.caches),
     }
+    if eng.pool is not None:
+        occ = eng.pool.occupancy()
+        out["pool_high_water_pages"] = occ["high_water"]
+        out["admission_rejections"] = eng.admission_rejections
+    return out
+
+
+def _measured() -> dict:
+    cfg = configs.get_smoke(ARCH)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(2, cfg.vocab, size=rng.randint(4, 17))
+               .astype(np.int32) for _ in range(N_REQUESTS)]
+    contig = _run_engine(params, cfg, prompts,
+                         ServeConfig(max_len=MAX_LEN, batch=BATCH,
+                                     eos_id=-1))
+    # Paged: same prompts through a pool holding half the contiguous
+    # reservation — the engine must stay correct *and* cheaper-resident.
+    n_pages = 1 + BATCH * MAX_LEN // PAGE_SIZE // 2
+    paged = _run_engine(params, cfg, prompts,
+                        ServeConfig(max_len=MAX_LEN, batch=BATCH,
+                                    eos_id=-1, paged=True,
+                                    page_size=PAGE_SIZE, n_pages=n_pages))
+    contig["paged"] = paged
+    contig["paged_rows_ratio"] = (paged["cache_hbm_rows"]
+                                  / contig["cache_hbm_rows"])
+    return contig
 
 
 def _modeled() -> dict:
@@ -81,17 +118,40 @@ def _modeled() -> dict:
     return out
 
 
+def _modeled_paged() -> dict:
+    """Paged decode_32k: long-tailed staggered lengths (geomspace — most
+    contexts short, a few at max_len, the shape real serving traffic has),
+    256-row pages."""
+    cfg = configs.get_config(ARCH)
+    max_len = 32768
+    lengths = np.geomspace(256, max_len, 128).astype(int)
+    out = autotune.paged_decode_model(
+        max_len, lengths, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.dhead, page_size=256)
+    out["max_len"] = max_len
+    out["mean_context"] = float(lengths.mean())
+    return out
+
+
 def run():
     m = _measured()
     c = _modeled()
+    p = _modeled_paged()
     return [
         ("measured",
          f"{m['tokens_per_s']:.1f}tok/s;prefill={m['prefill_tokens']};"
          f"decode={m['decode_tokens']};"
          f"executables={m['prefill_executables']}"),
+        ("measured_paged",
+         f"{m['paged']['tokens_per_s']:.1f}tok/s;"
+         f"rows_ratio={m['paged_rows_ratio']:.2f}"),
         ("modeled_decode_32k",
          f"naive={c['naive_s']*1e3:.3f}ms;fast={c['fast_s']*1e3:.3f}ms;"
          f"speedup={c['speedup']:.2f}x"),
+        ("paged_decode_32k",
+         f"reservation={p['reservation_ratio']:.2f};"
+         f"overhead={p['lookup_overhead_frac']*100:.1f}%;"
+         f"tok/s={p['tokens_per_s_paged']:.0f}"),
     ]
 
 
@@ -99,9 +159,14 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="")
     args = ap.parse_args()
-    payload = {"measured": _measured(), "modeled_decode_32k": _modeled()}
+    payload = {"measured": _measured(), "modeled_decode_32k": _modeled(),
+               "paged_decode_32k": _modeled_paged()}
     print(json.dumps(payload, indent=1))
     assert payload["modeled_decode_32k"]["speedup"] > 1.0
+    # Acceptance: paged holds < 50% of the contiguous reservation at
+    # decode_32k with staggered slot lengths.
+    assert payload["paged_decode_32k"]["reservation_ratio"] < 0.5
+    assert payload["measured"]["paged_rows_ratio"] < 1.0
     if args.out:
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=1)

@@ -17,6 +17,27 @@ fi
 echo "== import-walk smoke =="
 python -m pytest -x -q tests/test_import_walk.py
 
+echo "== benchmark artifacts =="
+# Torn/stale artifacts (tuning cache, BENCH_serving.json) fail here in
+# milliseconds instead of poisoning later runs.
+python scripts/validate_artifacts.py
+
+# With explicit pytest args, run exactly what the caller asked for: no
+# serving-subset pre-pass (it would be redundant) and no --ignore flags
+# (an explicit serving path + --ignore would collect nothing and exit 5
+# under set -e).
+IGNORES=()
+if [[ $# -eq 0 ]]; then
+    echo "== serving subset =="
+    # The serving stack regresses most often; surface its failures before
+    # the full sweep.
+    python -m pytest -x -q tests/test_serve.py tests/test_serve_paged.py \
+        tests/test_flash_decode.py tests/test_paged_kv.py
+    IGNORES=(--ignore=tests/test_serve.py --ignore=tests/test_serve_paged.py
+             --ignore=tests/test_flash_decode.py
+             --ignore=tests/test_paged_kv.py)
+fi
+
 echo "== test suite =="
 # ${MARK[@]+...}: empty-array expansion trips `set -u` on bash < 4.4.
-python -m pytest -x -q ${MARK[@]+"${MARK[@]}"} "$@"
+python -m pytest -x -q ${MARK[@]+"${MARK[@]}"} ${IGNORES[@]+"${IGNORES[@]}"} "$@"

@@ -1,0 +1,120 @@
+#!/usr/bin/env python
+"""Validate committed benchmark artifacts: parseable JSON + schema-sane.
+
+A torn write to ``benchmarks/artifacts/*.json`` (the tuning cache is
+written concurrently by test runs) or a stale ``BENCH_serving.json``
+otherwise surfaces much later as a confusing downstream failure; this
+fails the check gate in milliseconds instead. Runs standalone:
+
+    python scripts/validate_artifacts.py        (also part of make check)
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import numbers
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+FAILURES: list = []
+
+
+def fail(path: str, msg: str) -> None:
+    FAILURES.append(f"{os.path.relpath(path, REPO)}: {msg}")
+
+
+def load(path: str):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        fail(path, f"unreadable/torn JSON ({e})")
+        return None
+
+
+def require(path: str, obj, dotted: str, kind=numbers.Real) -> None:
+    cur = obj
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            fail(path, f"missing key {dotted!r}")
+            return
+        cur = cur[part]
+    if not isinstance(cur, kind):
+        fail(path, f"{dotted!r} is {type(cur).__name__}, want "
+                   f"{getattr(kind, '__name__', kind)}")
+
+
+def check_tuning_cache(path: str) -> None:
+    obj = load(path)
+    if obj is None:
+        return
+    if not isinstance(obj, dict):
+        return fail(path, f"root is {type(obj).__name__}, want object")
+    for key, entry in obj.items():
+        if not isinstance(entry, dict) or not {
+                "block_q", "block_k", "time_s", "terms"} <= set(entry):
+            fail(path, f"malformed entry {key!r}")
+        elif not (isinstance(entry["block_q"], int)
+                  and isinstance(entry["block_k"], int)
+                  and isinstance(entry["time_s"], numbers.Real)
+                  and entry["time_s"] > 0):
+            fail(path, f"implausible entry {key!r}")
+
+
+def check_dryrun_baseline(path: str) -> None:
+    obj = load(path)
+    if obj is None:
+        return
+    cells = obj.get("cells") if isinstance(obj, dict) else obj
+    if not isinstance(cells, (list, dict)) or not cells:
+        return fail(path, "no cells")
+
+
+def check_bench_serving(path: str) -> None:
+    obj = load(path)
+    if obj is None:
+        return
+    before = len(FAILURES)       # range checks gate on *this* file only
+    for dotted in ("measured.tokens_per_s", "measured.cache_hbm_rows",
+                   "measured.paged.tokens_per_s", "measured.paged_rows_ratio",
+                   "modeled_decode_32k.speedup",
+                   "paged_decode_32k.reservation_ratio",
+                   "paged_decode_32k.tokens_per_s_paged",
+                   "paged_decode_32k.lookup_overhead_frac"):
+        require(path, obj, dotted)
+    if len(FAILURES) == before:
+        if not obj["modeled_decode_32k"]["speedup"] > 1.0:
+            fail(path, "flash-decode speedup <= 1")
+        if not 0 < obj["paged_decode_32k"]["reservation_ratio"] < 0.5:
+            fail(path, "paged reservation_ratio not in (0, 0.5)")
+
+
+SPECIFIC = {
+    "attn_tuning_cache.json": check_tuning_cache,
+    "dryrun_baseline.json": check_dryrun_baseline,
+}
+
+
+def main() -> int:
+    seen = 0
+    for path in sorted(glob.glob(
+            os.path.join(REPO, "benchmarks", "artifacts", "*.json"))):
+        seen += 1
+        SPECIFIC.get(os.path.basename(path), load)(path)
+    bench = os.path.join(REPO, "BENCH_serving.json")
+    if os.path.exists(bench):
+        seen += 1
+        check_bench_serving(bench)
+    if FAILURES:
+        for f in FAILURES:
+            print(f"ARTIFACT INVALID: {f}", file=sys.stderr)
+        return 1
+    print(f"artifacts OK ({seen} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -260,9 +260,24 @@ def _load_tuning_cache() -> dict:
     if _tuning_cache is None:
         try:
             with open(TUNING_CACHE_PATH) as f:
-                _tuning_cache = json.load(f)
-        except (OSError, ValueError):
+                loaded = json.load(f)
+            if not isinstance(loaded, dict):
+                raise ValueError(
+                    f"cache root is {type(loaded).__name__}, not object")
+            _tuning_cache = loaded
+        except OSError:
+            # Missing or unreadable (permissions, transient IO): the file
+            # may still hold good TPU-measured entries — leave it alone.
             _tuning_cache = {}
+        except ValueError:
+            # Torn concurrent write / truncated file / non-object root:
+            # discard the bad file (so the next write-through rebuilds it
+            # from scratch) and fall back to re-deriving analytically.
+            _tuning_cache = {}
+            try:
+                os.remove(TUNING_CACHE_PATH)
+            except OSError:
+                pass
     return _tuning_cache
 
 
@@ -288,13 +303,19 @@ def choose_attn_block(p: AttnProblem,
     if use_cache:
         hit = _load_tuning_cache().get(key)
         if hit is not None:
-            blk = AttnBlock(hit["block_q"], hit["block_k"])
+            # A torn write can leave a structurally-broken entry even when
+            # the file parses; treat any malformed hit as a miss (the
+            # write-through below overwrites it with a good one).
+            try:
+                blk = AttnBlock(int(hit["block_q"]), int(hit["block_k"]))
+                terms, time_s = dict(hit["terms"]), float(hit["time_s"])
+            except (KeyError, TypeError, ValueError):
+                hit = None
             # Entries persist across cost-model/hardware-spec changes (and
             # may be TPU-measured or hand-edited): only trust ones still in
             # the feasible candidate set, else re-derive.
-            if blk in candidate_attn_blocks(p, tpu):
-                return blk, dict(hit["terms"], time_s=hit["time_s"],
-                                 cached=True)
+            if hit is not None and blk in candidate_attn_blocks(p, tpu):
+                return blk, dict(terms, time_s=time_s, cached=True)
     best, best_t, best_terms = None, float("inf"), None
     for c in candidate_attn_blocks(p, tpu):
         t, terms = attn_cost(p, c, tpu)
@@ -333,6 +354,66 @@ def decode_attn_speedup(max_len: int, lengths: Iterable[int], n_heads: int,
     fast = tick_cost(lengths)
     return {"naive_s": naive, "fast_s": fast,
             "speedup": naive / fast if fast else float("inf")}
+
+
+# Per-visited-block cost of resolving the page table: one dependent scalar
+# load off the prefetched table before the K/V DMA can issue — the roofline
+# analogue of the paper's TLB-miss penalty (ch. 3: address translation sits
+# on the load's critical path; here it is one SMEM lookup deep).
+PAGE_LOOKUP_S = 5e-8
+
+
+def paged_decode_model(max_len: int, lengths: Iterable[int], n_heads: int,
+                       n_kv_heads: int, head_dim: int, page_size: int,
+                       in_bytes: int = 2,
+                       page_lookup_s: float = PAGE_LOOKUP_S,
+                       tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU) -> dict:
+    """Paged vs contiguous decode for one engine tick: same FLOPs, a
+    page-table-lookup overhead term per visited K/V block, and an HBM
+    *reservation* that drops from ``slots * max_len`` rows to the pages
+    the live contexts actually touch (plus the null page).
+
+    This is the trade the paper's paging chapter prices for the hardware:
+    finer pages waste less capacity (internal fragmentation shrinks) but
+    pay more translation work; the engine's ``page_size`` knob sits on the
+    same curve.
+    """
+    # Deferred: keeps core free of a module-level serve/kernels dependency
+    # (kernels.ops imports this module at its top level).
+    from repro.kernels.flash_attention import _largest_divisor
+    from repro.serve.paged import reservation
+
+    group = max(1, n_heads // n_kv_heads)
+    lengths = [int(l) for l in lengths]
+    slots = len(lengths)
+
+    contig_s, paged_s, visited_total = 0.0, 0.0, 0
+    for length in lengths:
+        p = AttnProblem(sq=group, skv=max(length, 1), n_heads=n_kv_heads,
+                        head_dim=head_dim, causal=False, in_bytes=in_bytes)
+        c, _ = choose_attn_block(p, tpu, use_cache=False)
+        block_k = _largest_divisor(page_size, c.block_k)
+        t, terms = attn_cost(p, AttnBlock(c.block_q, block_k), tpu)
+        contig_s += t
+        visited = terms["visited_blocks"]
+        visited_total += visited
+        paged_s += t + visited * page_lookup_s
+
+    out = reservation(lengths, max_len, page_size)   # the one accounting
+    bytes_per_row = 2 * n_kv_heads * head_dim * in_bytes     # K + V
+    out.update({
+        "contig_s": contig_s,
+        "paged_s": paged_s,
+        "lookup_overhead_frac": (paged_s - contig_s) / contig_s
+        if contig_s else 0.0,
+        "visited_blocks": visited_total,
+        "tokens_per_s_contig": slots / contig_s if contig_s else 0.0,
+        "tokens_per_s_paged": slots / paged_s if paged_s else 0.0,
+        "hbm_paged_bytes_per_layer": out["rows_resident"] * bytes_per_row,
+        "hbm_contig_bytes_per_layer":
+            out["rows_reserved_contig"] * bytes_per_row,
+    })
+    return out
 
 
 # ----------------------------------------------------------------------------

@@ -12,6 +12,14 @@ O(actual context) instead of O(max_len).
 Layout: the (slot, kv head) pair is flattened into grid dim 0, exactly like
 ``flash_attention``'s (batch, head) flattening; GQA needs no materialized
 head repeat because the q rows for one kv head are contiguous.
+
+``flash_decode_paged`` is the same kernel against a *paged* cache
+(``serve.paged``): K/V live in a shared (n_pages, page_size, kvh, d) pool
+and each slot owns a page table instead of a contiguous row range. The
+page table rides in as a second scalar-prefetch argument and the K/V index
+maps walk it — a software TLB: grid step ki resolves (slot, ki) -> physical
+page before the DMA is issued, so non-contiguous pages stream exactly like
+the clamped contiguous stream (page 0 is the never-computed null page).
 """
 
 from __future__ import annotations
@@ -29,11 +37,10 @@ from repro.kernels.flash_attention import _largest_divisor
 NEG_INF = -1e30
 
 
-def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
-                   m_scr, l_scr, acc_scr, *,
-                   scale: float, block_k: int, kvh: int):
-    bh, ki = pl.program_id(0), pl.program_id(1)
-    length = lens_ref[bh // kvh]
+def _decode_body(length, ki, q_ref, read_kv, o_ref, m_scr, l_scr, acc_scr,
+                 *, scale: float, block_k: int):
+    """Shared online-softmax accumulator for both decode kernels; they
+    differ only in how the (block_k, d) K/V block is read (``read_kv``)."""
 
     @pl.when(ki == 0)
     def _init():
@@ -46,8 +53,7 @@ def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
     @pl.when(ki * block_k < length)
     def _step():
         q = q_ref[0].astype(jnp.float32)                  # (group, d)
-        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
-        v = v_ref[0].astype(jnp.float32)
+        k, v = read_kv()                                  # (bk, d) each
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
         cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         s = jnp.where(cols < length, s, NEG_INF)
@@ -65,6 +71,16 @@ def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
         # Zero-length slots (freed engine slots) produce zeros, not NaN.
         denom = jnp.where(l_scr[...] > 0.0, l_scr[...], 1.0)
         o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   scale: float, block_k: int, kvh: int):
+    bh, ki = pl.program_id(0), pl.program_id(1)
+    _decode_body(lens_ref[bh // kvh], ki, q_ref,
+                 lambda: (k_ref[0].astype(jnp.float32),
+                          v_ref[0].astype(jnp.float32)),
+                 o_ref, m_scr, l_scr, acc_scr, scale=scale, block_k=block_k)
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
@@ -127,4 +143,87 @@ def flash_decode(q, k, v, lengths, block_k=None,
         out_shape=jax.ShapeDtypeStruct((b * kvh, group, d), q.dtype),
         interpret=interpret,
     )(lengths, qf, kf, vf)
+    return out.reshape(b, h, d)
+
+
+def _paged_decode_kernel(lens_ref, pages_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *,
+                         scale: float, block_k: int, kvh: int):
+    del pages_ref                    # consumed by the index maps (the TLB)
+    bh, ki = pl.program_id(0), pl.program_id(1)
+    # K/V blocks carry a leading (page, in-page) pair instead of a row.
+    _decode_body(lens_ref[bh // kvh], ki, q_ref,
+                 lambda: (k_ref[0, 0].astype(jnp.float32),
+                          v_ref[0, 0].astype(jnp.float32)),
+                 o_ref, m_scr, l_scr, acc_scr, scale=scale, block_k=block_k)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode_paged(q, k_pages, v_pages, page_table, lengths,
+                       block_k=None, interpret: bool = False):
+    """Paged flash decode: q (b, h, d) vs a shared KV page pool.
+
+    k_pages/v_pages: (n_pages, page_size, kvh, d) — page 0 is the null
+    page. ``page_table``: (b, max_pages) int32 logical->physical map, 0 in
+    unallocated entries. ``lengths``: (b,) live rows per slot (0 allowed).
+    The table and lengths are both scalar-prefetched; the K/V index maps
+    first clamp ki to the slot's last live block (re-visiting the resident
+    block, so no fresh DMA) and then translate through the table.
+    ``block_k`` must divide ``page_size`` (None -> cost-model choice
+    snapped to a dividing size).
+    """
+    b, h, d = q.shape
+    n_pages, page_size, kvh, _ = k_pages.shape
+    max_pages = page_table.shape[1]
+    group = h // kvh
+    assert group * kvh == h, (h, kvh)
+    if block_k is None:
+        from repro.core import autotune
+        prob = autotune.AttnProblem(sq=group, skv=max_pages * page_size,
+                                    n_heads=kvh, head_dim=d, batch=b,
+                                    causal=False, in_bytes=q.dtype.itemsize)
+        chosen, _ = autotune.choose_attn_block(prob)
+        block_k = _largest_divisor(page_size, chosen.block_k)
+    block_k = min(block_k, page_size)
+    assert page_size % block_k == 0, (page_size, block_k)
+    bpp = page_size // block_k          # blocks per page
+    nk = max_pages * bpp
+
+    qf = q.reshape(b * kvh, group, d)
+    kf = k_pages.transpose(2, 0, 1, 3)  # (kvh, n_pages, page_size, d)
+    vf = v_pages.transpose(2, 0, 1, 3)
+    lengths = lengths.astype(jnp.int32)
+    page_table = page_table.astype(jnp.int32)
+
+    def kv_index(bh, ki, lens, pages):
+        # Clamp to the slot's last live block (no fresh DMA past the
+        # length), then walk the page table for the physical page.
+        slot = bh // kvh
+        last = jnp.maximum(lens[slot] - 1, 0) // block_k
+        kic = jnp.minimum(ki, last)
+        return (bh % kvh, pages[slot, kic // bpp], kic % bpp, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b * kvh, nk),
+        in_specs=[
+            pl.BlockSpec((1, group, d), lambda bh, ki, lens, pages: (bh, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), kv_index),
+            pl.BlockSpec((1, 1, block_k, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, group, d),
+                               lambda bh, ki, lens, pages: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, scale=1.0 / np.sqrt(d),
+                          block_k=block_k, kvh=kvh),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * kvh, group, d), q.dtype),
+        interpret=interpret,
+    )(lengths, page_table, qf, kf, vf)
     return out.reshape(b, h, d)

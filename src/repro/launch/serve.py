@@ -26,6 +26,13 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="KV rows from a shared page pool (serve/paged.py)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pool-frac", type=float, default=1.0,
+                    help="pool size as a fraction of the contiguous "
+                         "batch*max_len reservation (>= 1.0 keeps the "
+                         "full, exhaustion-free equivalent)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
@@ -33,9 +40,17 @@ def main(argv=None):
     if cfg.encoder is not None or cfg.n_frontend_tokens:
         raise SystemExit("serve launcher demo supports decoder-only archs")
     params = T.init_params(jax.random.PRNGKey(args.seed), cfg)
+    n_pages = None
+    if args.paged and args.pool_frac < 1.0:
+        # At least 2 (null page + one real page): a tiny fraction should
+        # degrade to a tiny-but-usable pool, not an assert.
+        n_pages = max(2, 1 + int(args.batch * args.max_len
+                                 // args.page_size * args.pool_frac))
     engine = ServingEngine(params, cfg,
                            ServeConfig(max_len=args.max_len,
-                                       batch=args.batch))
+                                       batch=args.batch, paged=args.paged,
+                                       page_size=args.page_size,
+                                       n_pages=n_pages))
     rng = np.random.RandomState(args.seed)
     t0 = time.time()
     for rid in range(args.requests):
@@ -47,6 +62,11 @@ def main(argv=None):
     toks = sum(len(v) for v in finished.values())
     print(f"served {len(finished)} requests, {toks} tokens "
           f"in {dt:.2f}s ({toks/dt:.1f} tok/s)")
+    if engine.pool is not None:
+        occ = engine.pool.occupancy()
+        print(f"  paged: {occ['high_water']}/{occ['n_pages'] - 1} pages "
+              f"high-water ({args.page_size} rows each), "
+              f"{engine.admission_rejections} admission holds")
     for rid in sorted(finished):
         print(f"  req {rid}: {finished[rid][:10]}...")
     return finished

@@ -206,6 +206,9 @@ def attention_apply(params: Params, cfg: AttnConfig, x, positions=None,
             idx = cache["index"]
             positions = positions + (idx[:, None] if idx.ndim == 1 else idx)
     q, k, v = _project_qkv(params, cfg, x, positions)
+    if cache is not None and "kp" in cache:
+        return _paged_decode_apply(params, cfg, x, q, k, v, cache,
+                                   use_flash=use_flash)
     if cache is not None:
         idx = cache["index"]
         if idx.ndim == 1:
@@ -258,6 +261,53 @@ def attention_apply(params: Params, cfg: AttnConfig, x, positions=None,
             mask = causal_mask(s) if cfg.causal else None
             out = sdpa(q, k, v, mask=mask, expand_kv=cfg.expand_kv,
                        probs_fp32=cfg.probs_fp32)
+    out = sharding.shard(out, "batch", "seq", "heads", "head_dim")
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return sharding.shard(y, "batch", "seq", "embed"), new_cache
+
+
+def _paged_decode_apply(params: Params, cfg: AttnConfig, x, q, k, v,
+                        cache: Params, use_flash: bool):
+    """Single-token decode against a paged KV cache (``serve.paged``).
+
+    cache = {"kp"/"vp": (n_pages, page_size, kvh, hd) shared pool,
+    "pages": (b, max_pages) per-slot page table (0 = null page),
+    "index": (b,) per-slot write position}. The new K/V row scatters
+    through the table; freed/idle slots (zeroed table rows) land in the
+    null page, so they can never corrupt a live slot's pages.
+    """
+    b, s, _ = x.shape
+    assert s == 1, ("paged KV caches serve single-token decode only; "
+                    "prefill goes through contiguous row caches", s)
+    idx = cache["index"]                       # (b,) per-slot lengths
+    page_size = cache["kp"].shape[1]
+    max_pages = cache["pages"].shape[1]
+    pj = jnp.clip(idx // page_size, 0, max_pages - 1)
+    page = cache["pages"][jnp.arange(b), pj]   # (b,) physical page
+    # A write position past the table's reach (a slot decoding beyond
+    # max_len, or a freed slot drifting) must land in the null page — the
+    # contiguous path drops the out-of-bounds scatter; clipping pj alone
+    # would overwrite row 0 of the slot's *last* live page instead.
+    page = jnp.where(idx < max_pages * page_size, page, 0)
+    row = idx % page_size
+    kp = cache["kp"].at[page, row].set(k[:, 0].astype(cache["kp"].dtype))
+    vp = cache["vp"].at[page, row].set(v[:, 0].astype(cache["vp"].dtype))
+    lengths = idx + 1
+    new_cache = {"kp": kp, "vp": vp, "pages": cache["pages"],
+                 "index": idx + 1}
+    if use_flash and not cfg.expand_kv:
+        from repro.kernels import ops as kernel_ops
+        out = kernel_ops.flash_decode_paged(
+            q[:, 0], kp.astype(q.dtype), vp.astype(q.dtype),
+            cache["pages"], lengths)[:, None]
+    else:
+        # Reference path: materialize the contiguous view via a
+        # page-table gather, then mask with the live lengths.
+        from repro.serve import paged as paged_mod
+        ck, cv = paged_mod.gather_kv(kp, vp, cache["pages"])
+        out = sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                   kv_lengths=lengths, expand_kv=cfg.expand_kv,
+                   probs_fp32=cfg.probs_fp32)
     out = sharding.shard(out, "batch", "seq", "heads", "head_dim")
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
     return sharding.shard(y, "batch", "seq", "embed"), new_cache

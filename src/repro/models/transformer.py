@@ -393,6 +393,62 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
     return caches
 
 
+def init_paged_caches(cfg: ModelConfig, batch: int, max_len: int,
+                      page_size: int, n_pages: int,
+                      dtype=None) -> List[Any]:
+    """Paged decode caches: per pattern position a shared KV page pool
+    instead of per-slot ``max_len`` reservations (``serve.paged``).
+
+    Leaves per attention position (stacked over periods like
+    ``init_caches``):
+
+    * ``kp``/``vp``: (n_pages, page_size, kvh, dhead) physical pool; page
+      0 is the null page (absorbs writes from freed/idle slots).
+    * ``pages``: (batch, max_pages) int32 per-slot page table, 0-filled —
+      one *logical* table shared by every layer; each layer keeps its own
+      physical pool under the same page ids.
+    * ``index``: (batch,) per-slot write position, identical to the
+      ``per_slot_index=True`` contiguous cache (``cache_lengths`` and the
+      engine's length plumbing work unchanged).
+
+    Only attention patterns page (SSM state is O(1) per slot — nothing to
+    page); hybrid stacks must serve contiguous.
+    """
+    assert all(k in ("attn", "cross") for k in cfg.pattern), \
+        ("paged KV caches require an attention-only pattern", cfg.pattern)
+    assert n_pages >= 2, n_pages
+    dtype = dtype or cfg.dtype
+    max_pages = -(-max_len // page_size)
+    caches = []
+    for _ in cfg.pattern:
+        c = {
+            "kp": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, cfg.dhead),
+                            dtype),
+            "vp": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, cfg.dhead),
+                            dtype),
+            "pages": jnp.zeros((batch, max_pages), jnp.int32),
+            "index": jnp.zeros((batch,), jnp.int32),
+        }
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.periods,) + a.shape),
+            c)
+        caches.append(stacked)
+    return caches
+
+
+def cache_hbm_rows(caches) -> int:
+    """KV rows of HBM the caches hold: ``batch * max_len`` per contiguous
+    layer, ``n_pages * page_size`` per paged pool (the reservation the
+    paged layout shrinks)."""
+    total = 0
+    for c in caches:
+        if "kp" in c:       # (periods, n_pages, page_size, kvh, d)
+            total += int(np.prod(c["kp"].shape[:3]))
+        elif "k" in c:      # (periods, batch, max_len, kvh, d)
+            total += int(np.prod(c["k"].shape[:3]))
+    return total
+
+
 # ----------------------------------------------------------------------------
 # Accounting (param counts, MODEL_FLOPS)
 # ----------------------------------------------------------------------------

@@ -1,2 +1,4 @@
 from repro.serve.engine import (ServeConfig, ServingEngine, decode_step,  # noqa
                                 greedy_generate, make_serve_step, prefill)
+from repro.serve.paged import (PageAllocator, PagePoolExhausted,  # noqa
+                               pages_for)

@@ -20,6 +20,12 @@ KV/SSM cache of the cell's sequence length, caches donated in-place.
   * **Per-slot lengths** — caches carry one write position per slot;
     with ``use_flash`` the flash-decode kernel scalar-prefetches them and
     streams only each slot's live K/V blocks (O(context), not O(max_len)).
+  * **Paged KV** (``ServeConfig.paged``) — slots stop reserving ``max_len``
+    rows each: K/V rows live in a shared page pool (``serve.paged``) and
+    each slot owns a page table. Admission allocates the prompt's pages
+    (rejecting cleanly when the pool is short — the request stays queued),
+    decode allocates lazily one page at a time as contexts grow, and
+    freeing a slot returns its pages for immediate reuse.
 """
 
 from __future__ import annotations
@@ -32,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as T
+from repro.serve import paged as paged_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +49,11 @@ class ServeConfig:
     eos_id: int = 1
     seed: int = 0                # sampling PRNG (temperature > 0)
     min_bucket: int = 8          # smallest prefill bucket (power of two)
+    paged: bool = False          # KV rows from a shared page pool
+    page_size: int = 16          # KV rows per page (paged=True)
+    n_pages: Optional[int] = None  # pool size incl. null page; None ->
+    # the contiguous equivalent (batch * max_len / page_size + 1), i.e.
+    # no savings but no exhaustion risk; size it down to reclaim HBM.
 
 
 def prefill(params, cfg: T.ModelConfig, tokens, caches,
@@ -131,22 +143,39 @@ class ServingEngine:
         self.params = params
         self.cfg = cfg
         self.scfg = serve_cfg
-        self.caches = T.init_caches(cfg, serve_cfg.batch, serve_cfg.max_len,
-                                    per_slot_index=True)
-        self.slots: List[Optional[Request]] = [None] * serve_cfg.batch
-        self.queue: List[Request] = []
-        self.last_tok = jnp.zeros((serve_cfg.batch,), jnp.int32)
-        self.finished: Dict[int, List[int]] = {}
-        self._key = jax.random.PRNGKey(serve_cfg.seed)
         # Bucketing pads the prompt on the right; that only composes with
         # attention layers (masked K/V). SSM/hybrid stacks carry recurrent
         # state through every position, so they prefill at exact length
         # (still jitted + fused — just one executable per distinct length).
         self._bucketed = all(k in ("attn", "cross") for k in cfg.pattern) \
             and cfg.encoder is None and not cfg.n_frontend_tokens
+        if serve_cfg.paged:
+            assert self._bucketed, \
+                "paged KV serving requires an attention-only stack"
+            assert serve_cfg.max_len % serve_cfg.page_size == 0, \
+                (serve_cfg.max_len, serve_cfg.page_size)
+            n_pages = serve_cfg.n_pages or (
+                1 + serve_cfg.batch * serve_cfg.max_len
+                // serve_cfg.page_size)
+            self.pool: Optional[paged_mod.PageAllocator] = \
+                paged_mod.PageAllocator(n_pages, serve_cfg.page_size)
+            self.caches = T.init_paged_caches(
+                cfg, serve_cfg.batch, serve_cfg.max_len,
+                serve_cfg.page_size, n_pages)
+        else:
+            self.pool = None
+            self.caches = T.init_caches(cfg, serve_cfg.batch,
+                                        serve_cfg.max_len,
+                                        per_slot_index=True)
+        self.slots: List[Optional[Request]] = [None] * serve_cfg.batch
+        self.queue: List[Request] = []
+        self.last_tok = jnp.zeros((serve_cfg.batch,), jnp.int32)
+        self.finished: Dict[int, List[int]] = {}
+        self._key = jax.random.PRNGKey(serve_cfg.seed)
         self._prefill_fns: Dict[int, Callable] = {}
         self.prefill_traces: Dict[int, int] = {}
         self.decode_traces = 0
+        self.admission_rejections = 0     # pool-exhausted admission holds
         self._step = self._make_decode_step()
 
     # -- jitted executables ---------------------------------------------------
@@ -174,6 +203,10 @@ class ServingEngine:
         """One jitted prefill-install-sample executable per bucket."""
         fn = self._prefill_fns.get(bucket)
         if fn is not None:
+            return fn
+        if self.pool is not None:
+            fn = self._paged_prefill_fn(bucket)
+            self._prefill_fns[bucket] = fn
             return fn
         cfg, scfg = self.cfg, self.scfg
         pick = sampler(scfg.temperature)
@@ -203,6 +236,86 @@ class ServingEngine:
         self._prefill_fns[bucket] = fn
         return fn
 
+    def _paged_prefill_fn(self, bucket: int) -> Callable:
+        """Paged install: prefill runs on a contiguous *row* cache (the
+        model's prompt pass is unchanged), then the row's K/V scatters
+        through the slot's page table into each layer's pool. Positions
+        past the allocated pages walk null (0) table entries and land in
+        the null page — padded bucket rows can never touch live pages."""
+        cfg, scfg = self.cfg, self.scfg
+        ps = scfg.page_size
+        n_rows = paged_mod.pages_for(bucket, ps) * ps   # page-aligned
+        pick = sampler(scfg.temperature)
+
+        def prefill_into_slot(params, tokens, true_len, slot, caches, key):
+            self.prefill_traces[bucket] = \
+                self.prefill_traces.get(bucket, 0) + 1   # trace-time only
+            row = T.init_caches(cfg, 1, n_rows, per_slot_index=True)
+            logits, row, _ = T.forward(params, cfg, tokens, caches=row)
+            last = jax.lax.dynamic_index_in_dim(logits, true_len - 1,
+                                                axis=1, keepdims=False)
+            pos = jnp.arange(n_rows)
+            new_caches = []
+            for c, r in zip(caches, row):
+                table = c["pages"][0, slot]          # same for every period
+                page_of = table[pos // ps]
+                row_of = pos % ps
+                # r["k"]: (periods, 1, n_rows, kvh, d) -> pool scatter at
+                # (period, page_of[t], row_of[t]).
+                kp = c["kp"].at[:, page_of, row_of].set(
+                    r["k"][:, 0].astype(c["kp"].dtype))
+                vp = c["vp"].at[:, page_of, row_of].set(
+                    r["v"][:, 0].astype(c["vp"].dtype))
+                index = c["index"].at[:, slot].set(true_len)
+                new_caches.append(dict(c, kp=kp, vp=vp, index=index))
+            return pick(last[0], key), new_caches
+
+        return jax.jit(prefill_into_slot, donate_argnums=(4,))
+
+    # -- page-table plumbing --------------------------------------------------
+
+    def _set_page_table_row(self, slot: int, pages: List[int]) -> None:
+        """Install a slot's logical->physical map in every layer cache."""
+        max_pages = self.scfg.max_len // self.scfg.page_size
+        table = np.zeros((max_pages,), np.int32)
+        table[:len(pages)] = pages
+        table = jnp.asarray(table)
+        self.caches = [dict(c, pages=c["pages"].at[:, slot].set(table))
+                       for c in self.caches]
+
+    def _pages_through_tick(self, slot: Request) -> int:
+        """Table entries ``slot`` must have for this tick's decode write.
+
+        The slot's cache length, host-side (no device sync), is the prompt
+        plus every decoded token except the freshly sampled one — which
+        this tick writes at position ``length``. Writes at/past ``max_len``
+        spill to the null page and need no backing. Both the admission
+        headroom check and the lazy allocator below use this one number,
+        so they can never disagree."""
+        length = len(slot.prompt) + len(slot.generated) - 1
+        max_pages = self.scfg.max_len // self.scfg.page_size
+        return min(length // self.scfg.page_size + 1, max_pages)
+
+    def _ensure_decode_pages(self) -> None:
+        """Lazily grow each active slot's table so the next decode token's
+        write position is backed by a real page (admission only reserved
+        the prompt's pages). Raises ``PagePoolExhausted`` when the pool
+        can't cover an already-admitted slot — size ``n_pages`` for the
+        decode growth you admit (see serve/README.md)."""
+        if self.pool is None:
+            return
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            target = self._pages_through_tick(slot)
+            while len(self.pool.slot_pages.get(i, ())) < target:
+                have = len(self.pool.slot_pages.get(i, ()))
+                pid = self.pool.alloc(i, 1)[0]
+                self.caches = [
+                    dict(c, pages=c["pages"].at[:, i, have].set(pid))
+                    for c in self.caches
+                ]
+
     # -- request lifecycle ----------------------------------------------------
 
     def submit(self, req: Request):
@@ -228,25 +341,75 @@ class ServingEngine:
         if tok == self.scfg.eos_id or len(req.generated) >= req.max_new:
             req.done = True
             self.finished[req.rid] = req.generated
-            self.slots[i] = None
-            # Zero the slot's per-slot write position so flash decode stops
-            # streaming the dead context (lengths drift back up by one per
-            # tick until the slot is re-admitted, but never to ~max_len).
+            self.free_slot(i)
+            return True
+        return False
+
+    def free_slot(self, i: int) -> None:
+        """Release slot ``i``: zero its per-slot write position (flash
+        decode stops streaming the dead context) and, when paged, return
+        its pages to the pool and null out its page table row — the freed
+        slot's drifting writes land in the null page, never in a page the
+        pool may immediately re-assign."""
+        self.slots[i] = None
+        if self.pool is not None:
+            self.pool.free_slot(i)
+            self.caches = [
+                dict(c, index=c["index"].at[:, i].set(0),
+                     pages=c["pages"].at[:, i].set(0))
+                for c in self.caches
+            ]
+        else:
             self.caches = [
                 dict(c, index=c["index"].at[:, i].set(0))
                 for c in self.caches
             ]
-            return True
-        return False
+
+    def _imminent_page_need(self) -> int:
+        """Pages ``_ensure_decode_pages`` will take for committed slots
+        this tick. Admission must leave this headroom: a new request that
+        grabs the pool's last page and strands an already-admitted slot's
+        boundary crossing turns a clean hold into a mid-tick crash."""
+        return sum(
+            max(0, self._pages_through_tick(slot)
+                - len(self.pool.slot_pages.get(i, ())))
+            for i, slot in enumerate(self.slots) if slot is not None)
 
     def _admit(self):
         for i, slot in enumerate(self.slots):
             if slot is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue[0]
                 prompt = np.asarray(req.prompt, np.int32)
                 bucket = self.bucket_for(len(prompt))
                 assert len(prompt) <= bucket <= self.scfg.max_len, \
                     (len(prompt), bucket, self.scfg.max_len)
+                if self.pool is not None:
+                    # Reserve the prompt's pages up front; a short pool
+                    # rejects cleanly — the request stays queued (FIFO:
+                    # later requests wait too) and retries next tick,
+                    # after finished slots return pages. The check covers
+                    # the prompt, this slot's first decode write (which
+                    # lands this same tick), and the imminent growth of
+                    # already-committed slots.
+                    ps = self.scfg.page_size
+                    need = paged_mod.pages_for(len(prompt), ps)
+                    # The admission bar is prompt pages + the first decode
+                    # write (which lands this same tick) — a request over
+                    # the pool's *capacity* on that bar can never admit,
+                    # so fail loudly instead of holding it forever.
+                    with_decode = paged_mod.pages_for(
+                        min(len(prompt) + 1, self.scfg.max_len), ps)
+                    if with_decode > self.pool.n_pages - 1:
+                        raise paged_mod.PagePoolExhausted(
+                            f"request {req.rid}: needs {with_decode} pages "
+                            f"but the pool holds {self.pool.n_pages - 1}; "
+                            f"raise n_pages or page_size")
+                    if not self.pool.can_alloc(
+                            with_decode + self._imminent_page_need()):
+                        self.admission_rejections += 1
+                        break
+                    self._set_page_table_row(i, self.pool.alloc(i, need))
+                self.queue.pop(0)
                 padded = np.zeros((1, bucket), np.int32)
                 padded[0, :len(prompt)] = prompt
                 tok, self.caches = self._prefill_fn(bucket)(
@@ -261,6 +424,7 @@ class ServingEngine:
     def tick(self) -> int:
         """Admit + one decode step for all active slots; returns #active."""
         self._admit()
+        self._ensure_decode_pages()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return 0

@@ -1,0 +1,182 @@
+"""Paged KV cache: a virtual-memory view of serving HBM.
+
+The serving engine's contiguous caches reserve ``batch * max_len`` KV rows
+per layer no matter how long each slot's context actually is — the exact
+flat-allocation waste the paper's memory-hierarchy chapter dissects at the
+page-table level (and Mei & Chu's TLB/page-size geometry quantifies). This
+module applies the same cure the hardware does: a fixed page size, a shared
+physical pool, and per-slot page tables.
+
+Pieces:
+
+* ``PageAllocator`` — host-side free-list allocator over logical page ids.
+  Page 0 is the **null page**: never allocated, it absorbs writes from
+  freed/idle slots (whose page-table rows are zeroed) exactly like a
+  faulting PTE redirected to a scratch frame. Allocation is LIFO so a
+  freed slot's pages are the next ones handed out (warm-page reuse).
+* ``gather_kv`` — pure-jnp page-table walk: materializes the contiguous
+  (b, max_pages*page_size, kvh, d) view of a pool. Reference/parity path
+  for the paged flash-decode kernel (and the non-flash engine path).
+* Reservation accounting — ``rows_resident`` / ``reservation`` report the
+  HBM the paged layout actually holds vs the contiguous ``slots*max_len``
+  reservation, the headline number in ``benchmarks/tpu_serving.py``.
+
+The physical pools themselves live in the model caches (one pool per
+pattern position, stacked over periods — see
+``models.transformer.init_paged_caches``); every layer shares one logical
+page table per slot, so the allocator needs no notion of layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+
+NULL_PAGE = 0
+
+
+class PagePoolExhausted(RuntimeError):
+    """No free pages left in the shared KV pool."""
+
+
+def pages_for(n_rows: int, page_size: int) -> int:
+    """Pages needed to hold ``n_rows`` KV rows."""
+    return -(-int(n_rows) // page_size)
+
+
+@dataclasses.dataclass
+class PageAllocator:
+    """Free-list allocator over the shared KV page pool.
+
+    ``n_pages`` counts physical pages *including* the null page, so the
+    allocatable capacity is ``n_pages - 1``. Invariants (asserted):
+
+    * a page is never handed out while still owned by a live slot,
+    * the null page is never handed out,
+    * every page is either free or owned by exactly one slot.
+    """
+
+    n_pages: int
+    page_size: int
+
+    def __post_init__(self):
+        assert self.n_pages >= 2, "pool needs the null page + 1 real page"
+        assert self.page_size >= 1
+        # LIFO free list: freshly freed pages are reused first.
+        self._free: List[int] = list(range(self.n_pages - 1, NULL_PAGE, -1))
+        self.slot_pages: Dict[int, List[int]] = {}
+        self._live: set = set()
+        self.high_water = 0
+
+    # -- alloc/free -----------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return len(self._live)
+
+    def can_alloc(self, n: int) -> bool:
+        return len(self._free) >= n
+
+    def alloc(self, slot: int, n: int = 1) -> List[int]:
+        """Take ``n`` pages for ``slot``; raises ``PagePoolExhausted``
+        (allocating nothing) when the free list is short."""
+        if len(self._free) < n:
+            raise PagePoolExhausted(
+                f"need {n} pages for slot {slot}, {len(self._free)} free "
+                f"({self.pages_in_use}/{self.n_pages - 1} in use)")
+        got = [self._free.pop() for _ in range(n)]
+        for p in got:
+            assert p != NULL_PAGE and p not in self._live, p
+            self._live.add(p)
+        self.slot_pages.setdefault(slot, []).extend(got)
+        self.high_water = max(self.high_water, self.pages_in_use)
+        return got
+
+    def free_slot(self, slot: int) -> List[int]:
+        """Return every page owned by ``slot`` to the free list."""
+        pages = self.slot_pages.pop(slot, [])
+        for p in pages:
+            assert p in self._live, p
+            self._live.discard(p)
+        # Reversed: re-admission walks pages in allocation order again.
+        self._free.extend(reversed(pages))
+        return pages
+
+    def reset(self) -> None:
+        """Free everything (engine restart)."""
+        self.__post_init__()
+
+    # -- accounting -----------------------------------------------------------
+
+    def rows_resident(self) -> int:
+        """KV rows the paged layout holds live right now (incl. the null
+        page) — the paged analogue of the contiguous ``slots * max_len``."""
+        return (self.pages_in_use + 1) * self.page_size
+
+    def occupancy(self, lengths: Optional[Dict[int, int]] = None) -> dict:
+        """Pool utilization; with per-slot ``lengths`` also the internal
+        fragmentation (allocated-but-unused rows — the page-granularity
+        tax, the repo's analogue of the paper's page-size trade)."""
+        out = {
+            "n_pages": self.n_pages,
+            "page_size": self.page_size,
+            "pages_in_use": self.pages_in_use,
+            "pages_free": self.free_pages,
+            "high_water": self.high_water,
+            "utilization": self.pages_in_use / max(1, self.n_pages - 1),
+            "rows_resident": self.rows_resident(),
+        }
+        if lengths is not None:
+            alloc_rows = sum(len(ps) * self.page_size
+                             for ps in self.slot_pages.values())
+            used_rows = sum(int(l) for l in lengths.values())
+            out["fragmentation_rows"] = alloc_rows - used_rows
+            out["fragmentation_frac"] = ((alloc_rows - used_rows)
+                                         / max(1, alloc_rows))
+        return out
+
+
+# ----------------------------------------------------------------------------
+# Pure-jnp page-table walk (reference path) + reservation model
+# ----------------------------------------------------------------------------
+
+def gather_kv(kp, vp, pages):
+    """Materialize the contiguous view of a paged pool.
+
+    kp/vp: (n_pages, page_size, kvh, d); pages: (b, max_pages) int32 with
+    0 = null page. Returns (b, max_pages*page_size, kvh, d) — rows mapped
+    through the null page are garbage and must be masked by ``kv_lengths``
+    (the caller's lengths never reach into them).
+    """
+    b, max_pages = pages.shape
+    ps = kp.shape[1]
+    kc = jnp.take(kp, pages, axis=0).reshape(b, max_pages * ps, *kp.shape[2:])
+    vc = jnp.take(vp, pages, axis=0).reshape(b, max_pages * ps, *vp.shape[2:])
+    return kc, vc
+
+
+def reservation(lengths, max_len: int, page_size: int) -> dict:
+    """Modeled HBM reservation, paged vs contiguous, for one layer's KV.
+
+    ``lengths`` are per-slot live context lengths. Contiguous reserves
+    ``slots * max_len`` rows up front; paged holds only the pages the live
+    contexts touch (plus the null page).
+    """
+    lengths = [int(l) for l in lengths]
+    slots = len(lengths)
+    rows_paged = (sum(pages_for(l, page_size) for l in lengths) + 1) \
+        * page_size
+    rows_contig = slots * max_len
+    return {
+        "page_size": page_size,
+        "slots": slots,
+        "rows_resident": rows_paged,
+        "rows_reserved_contig": rows_contig,
+        "reservation_ratio": rows_paged / max(1, rows_contig),
+    }

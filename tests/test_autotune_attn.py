@@ -88,6 +88,46 @@ def test_decode_speedup_gt_one_for_ragged_contexts():
     assert full["speedup"] == pytest.approx(1.0)
 
 
+@pytest.mark.parametrize("garbage", [
+    '{"tpu_v5e:sq=1024', " ", "\x00\x01binary", "null", "[1, 2, 3]", '"str"',
+])
+def test_tuning_cache_recovers_from_corrupt_file(tmp_path, monkeypatch,
+                                                 garbage):
+    """A torn concurrent write (truncated / binary / non-object JSON)
+    must not crash the cache: the bad file is discarded and the next
+    write-through rebuilds it."""
+    path = tmp_path / "cache.json"
+    path.write_text(garbage)
+    monkeypatch.setattr(autotune, "TUNING_CACHE_PATH", str(path))
+    monkeypatch.setattr(autotune, "_tuning_cache", None)
+    p = _problem(1024, 1024)
+    cfg, terms = autotune.choose_attn_block(p)
+    assert "cached" not in terms              # recovered, not served stale
+    analytic, _ = autotune.choose_attn_block(p, use_cache=False)
+    assert cfg == analytic
+    rebuilt = json.load(open(path))           # rebuilt clean by the store
+    assert isinstance(rebuilt, dict) and len(rebuilt) == 1
+
+
+def test_tuning_cache_tolerates_malformed_entry(tmp_path, monkeypatch):
+    """A structurally-broken entry (file parses, entry torn) is a miss and
+    gets overwritten with a good one."""
+    path = tmp_path / "cache.json"
+    monkeypatch.setattr(autotune, "TUNING_CACHE_PATH", str(path))
+    monkeypatch.setattr(autotune, "_tuning_cache", None)
+    p = _problem(1024, 1024)
+    key = autotune._cache_key(p, hwmodel.DEFAULT_TPU)
+    for bad in ({"block_q": 128}, "torn", {"block_q": "x", "block_k": 1,
+                                           "terms": {}, "time_s": 0.0}):
+        path.write_text(json.dumps({key: bad}))
+        monkeypatch.setattr(autotune, "_tuning_cache", None)
+        cfg, terms = autotune.choose_attn_block(p)
+        assert "cached" not in terms, bad
+        assert cfg == autotune.choose_attn_block(p, use_cache=False)[0]
+        stored = json.load(open(path))[key]
+        assert stored["block_q"] == cfg.block_q   # overwritten in place
+
+
 def test_tuning_cache_roundtrip(tmp_path, monkeypatch):
     path = tmp_path / "cache.json"
     monkeypatch.setattr(autotune, "TUNING_CACHE_PATH", str(path))
