@@ -13,11 +13,18 @@ Two kinds of numbers:
   off-TPU.
 
 Paged vs contiguous rides in both: the measured run repeats through a
-paged engine (same prompts, half-size page pool) and reports the HBM rows
-each cache layout actually holds; the modeled ``decode_32k`` cell prices
-the paged variant (page-table-lookup overhead, reservation ratio) over a
-long-tailed stagger of slot lengths — the serving distribution where flat
-``slots * max_len`` reservations waste the most.
+paged engine (same prompts, half-size page pool, chunked prefill) and
+reports the HBM rows each cache layout actually holds; the modeled
+``decode_32k`` cell prices the paged variant (page-table-lookup overhead,
+reservation ratio) over a long-tailed stagger of slot lengths — the
+serving distribution where flat ``slots * max_len`` reservations waste the
+most.
+
+Chunked prefill adds two cells: ``prefill_chunked_interleave`` (measured —
+decode tokens that land *while* a long prompt is mid-prefill, the
+head-of-line stall the chunk scheduler removes) and ``prefill_chunked_32k``
+(modeled — the autotune chunk cost model's chosen chunk vs whole-prompt
+prefill: total-time overhead paid, interleave latency bought back).
 
   PYTHONPATH=src python -m benchmarks.tpu_serving --out BENCH_serving.json
 """
@@ -49,11 +56,17 @@ PAGE_SIZE = 8           # smoke-model pages (production: 128+, MXU-aligned)
 def _run_engine(params, cfg, prompts, serve_cfg: ServeConfig) -> dict:
     eng = ServingEngine(params, cfg, serve_cfg)
     # Warm every executable the timed run will hit (compile time is not
-    # serving throughput): one prompt per bucket, plus the decode step.
-    buckets = {eng.bucket_for(len(p)) for p in prompts}
-    for wid, b in enumerate(sorted(buckets)):
-        eng.submit(Request(rid=-1 - wid,
-                           prompt=np.resize(prompts[0], b), max_new=2))
+    # serving throughput). Contiguous: one prompt per bucket. Paged: the
+    # single chunk executable — one multi-chunk prompt covers it.
+    if eng.pool is None:
+        buckets = {eng.bucket_for(len(p)) for p in prompts}
+        for wid, b in enumerate(sorted(buckets)):
+            eng.submit(Request(rid=-1 - wid,
+                               prompt=np.resize(prompts[0], b), max_new=2))
+    else:
+        warm_len = min(eng.chunk + 1, serve_cfg.max_len - 2)
+        eng.submit(Request(rid=-1, prompt=np.resize(prompts[0], warm_len),
+                           max_new=2))
     eng.run_until_drained()
     if eng.pool is not None:
         # Report the timed run's pool pressure, not the warm-up's.
@@ -80,6 +93,8 @@ def _run_engine(params, cfg, prompts, serve_cfg: ServeConfig) -> dict:
         occ = eng.pool.occupancy()
         out["pool_high_water_pages"] = occ["high_water"]
         out["admission_rejections"] = eng.admission_rejections
+        out["prefill_chunk"] = eng.chunk
+        out["preemptions"] = eng.preemptions
     return out
 
 
@@ -94,15 +109,86 @@ def _measured() -> dict:
                                      eos_id=-1))
     # Paged: same prompts through a pool holding half the contiguous
     # reservation — the engine must stay correct *and* cheaper-resident.
+    # Prompts stream through the page table in 8-row chunks (one chunk
+    # executable total; see prefill_executables == 1 in the output).
     n_pages = 1 + BATCH * MAX_LEN // PAGE_SIZE // 2
     paged = _run_engine(params, cfg, prompts,
                         ServeConfig(max_len=MAX_LEN, batch=BATCH,
                                     eos_id=-1, paged=True,
-                                    page_size=PAGE_SIZE, n_pages=n_pages))
+                                    page_size=PAGE_SIZE, n_pages=n_pages,
+                                    chunk_size=PAGE_SIZE))
     contig["paged"] = paged
     contig["paged_rows_ratio"] = (paged["cache_hbm_rows"]
                                   / contig["cache_hbm_rows"])
     return contig
+
+
+def _measured_interleave() -> dict:
+    """Long-prompt interleave cell: three slots decoding while a 48-token
+    prompt streams in 8-row chunks — every mid-prefill tick must land one
+    decode token per active slot (the head-of-line stall the bucketed
+    row-cache prefill used to impose is gone)."""
+    cfg = configs.get_smoke(ARCH)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(1)
+    scfg = ServeConfig(max_len=64, batch=4, eos_id=-1, paged=True,
+                       page_size=8, chunk_size=8)
+    eng = ServingEngine(params, cfg, scfg)
+    eng.submit(Request(rid=-1, prompt=rng.randint(2, cfg.vocab, 9)
+                       .astype(np.int32), max_new=2))      # warm both fns
+    eng.run_until_drained()
+    for rid in range(3):
+        eng.submit(Request(rid=rid, prompt=rng.randint(2, cfg.vocab, 7)
+                           .astype(np.int32), max_new=40))
+    eng.tick()                                 # all three decoding
+    long_prompt = rng.randint(2, cfg.vocab, 48).astype(np.int32)
+    eng.submit(Request(rid=9, prompt=long_prompt, max_new=2))
+    decoded_before = sum(len(eng.slots[i].generated) for i in range(3))
+    t0 = time.perf_counter()
+    mid_ticks = 0
+    eng.tick()                                 # admit + first chunk
+    while 3 in eng._prefilling:
+        eng.tick()
+        mid_ticks += 1
+    dt = time.perf_counter() - t0
+    decoded_during = sum(len(eng.slots[i].generated)
+                         for i in range(3)) - decoded_before
+    eng.run_until_drained()
+    return {
+        "long_prompt_len": len(long_prompt),
+        "prefill_chunks": -(-len(long_prompt) // scfg.chunk_size),
+        "mid_prefill_ticks": mid_ticks,
+        "decode_slots": 3,
+        "decode_tokens_during_prefill": decoded_during,
+        "wall_s": dt,
+        "prefill_executables": len(eng.prefill_traces),
+    }
+
+
+def _modeled_chunked() -> dict:
+    """prefill_chunked_32k: the autotune chunk cost model at production
+    shape — chosen chunk vs whole-prompt (row-cache-equivalent) prefill:
+    the total-time overhead chunking pays, and the interleave latency it
+    buys back for concurrent decode slots."""
+    cfg = configs.get_config(ARCH)
+    page_size = 256
+    chunk, terms = autotune.choose_prefill_chunk(
+        32768, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.dhead, page_size=page_size)
+    whole = autotune.prefill_chunk_model(
+        32768, 32768, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.dhead, page_size=page_size)
+    out = dict(terms)
+    out.update({
+        "page_size": page_size,
+        "whole_prompt_prefill_s": whole["prefill_s"],
+        "whole_prompt_latency_s": whole["interleave_latency_s"],
+        "prefill_overhead_frac":
+            terms["prefill_s"] / whole["prefill_s"] - 1.0,
+        "latency_reduction":
+            whole["interleave_latency_s"] / terms["interleave_latency_s"],
+    })
+    return out
 
 
 def _modeled() -> dict:
@@ -137,6 +223,8 @@ def run():
     m = _measured()
     c = _modeled()
     p = _modeled_paged()
+    il = _measured_interleave()
+    ck = _modeled_chunked()
     return [
         ("measured",
          f"{m['tokens_per_s']:.1f}tok/s;prefill={m['prefill_tokens']};"
@@ -144,7 +232,9 @@ def run():
          f"executables={m['prefill_executables']}"),
         ("measured_paged",
          f"{m['paged']['tokens_per_s']:.1f}tok/s;"
-         f"rows_ratio={m['paged_rows_ratio']:.2f}"),
+         f"rows_ratio={m['paged_rows_ratio']:.2f};"
+         f"chunk={m['paged']['prefill_chunk']};"
+         f"executables={m['paged']['prefill_executables']}"),
         ("modeled_decode_32k",
          f"naive={c['naive_s']*1e3:.3f}ms;fast={c['fast_s']*1e3:.3f}ms;"
          f"speedup={c['speedup']:.2f}x"),
@@ -152,6 +242,14 @@ def run():
          f"reservation={p['reservation_ratio']:.2f};"
          f"overhead={p['lookup_overhead_frac']*100:.1f}%;"
          f"tok/s={p['tokens_per_s_paged']:.0f}"),
+        ("prefill_chunked_interleave",
+         f"decode_toks_mid_prefill={il['decode_tokens_during_prefill']};"
+         f"chunks={il['prefill_chunks']};"
+         f"executables={il['prefill_executables']}"),
+        ("prefill_chunked_32k",
+         f"chunk={ck['chunk']};"
+         f"overhead={ck['prefill_overhead_frac']*100:.1f}%;"
+         f"latency/{ck['latency_reduction']:.0f}"),
     ]
 
 
@@ -160,13 +258,22 @@ def main():
     ap.add_argument("--out", default="")
     args = ap.parse_args()
     payload = {"measured": _measured(), "modeled_decode_32k": _modeled(),
-               "paged_decode_32k": _modeled_paged()}
+               "paged_decode_32k": _modeled_paged(),
+               "prefill_chunked_interleave": _measured_interleave(),
+               "prefill_chunked_32k": _modeled_chunked()}
     print(json.dumps(payload, indent=1))
     assert payload["modeled_decode_32k"]["speedup"] > 1.0
     # Acceptance: paged holds < 50% of the contiguous reservation at
     # decode_32k with staggered slot lengths.
     assert payload["paged_decode_32k"]["reservation_ratio"] < 0.5
     assert payload["measured"]["paged_rows_ratio"] < 1.0
+    # Acceptance: one chunk executable regardless of prompt-length mix,
+    # and decode ticks land tokens while the long prompt is mid-prefill.
+    assert payload["measured"]["paged"]["prefill_executables"] == 1
+    assert payload["prefill_chunked_interleave"][
+        "decode_tokens_during_prefill"] > 0
+    assert payload["prefill_chunked_interleave"]["prefill_executables"] == 1
+    assert payload["prefill_chunked_32k"]["latency_reduction"] > 1.0
     if args.out:
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=1)

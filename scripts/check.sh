@@ -30,10 +30,14 @@ IGNORES=()
 if [[ $# -eq 0 ]]; then
     echo "== serving subset =="
     # The serving stack regresses most often; surface its failures before
-    # the full sweep.
+    # the full sweep. test_serve_chunked also gates the single-trace
+    # invariant: ServingEngine.prefill_traces must stay at one executable
+    # for the chunked path no matter the prompt-length mix.
     python -m pytest -x -q tests/test_serve.py tests/test_serve_paged.py \
+        tests/test_serve_chunked.py \
         tests/test_flash_decode.py tests/test_paged_kv.py
     IGNORES=(--ignore=tests/test_serve.py --ignore=tests/test_serve_paged.py
+             --ignore=tests/test_serve_chunked.py
              --ignore=tests/test_flash_decode.py
              --ignore=tests/test_paged_kv.py)
 fi

@@ -80,16 +80,38 @@ def check_bench_serving(path: str) -> None:
     before = len(FAILURES)       # range checks gate on *this* file only
     for dotted in ("measured.tokens_per_s", "measured.cache_hbm_rows",
                    "measured.paged.tokens_per_s", "measured.paged_rows_ratio",
+                   "measured.paged.prefill_executables",
+                   "measured.paged.prefill_chunk",
                    "modeled_decode_32k.speedup",
                    "paged_decode_32k.reservation_ratio",
                    "paged_decode_32k.tokens_per_s_paged",
-                   "paged_decode_32k.lookup_overhead_frac"):
+                   "paged_decode_32k.lookup_overhead_frac",
+                   "prefill_chunked_interleave.decode_tokens_during_prefill",
+                   "prefill_chunked_interleave.prefill_chunks",
+                   "prefill_chunked_interleave.prefill_executables",
+                   "prefill_chunked_32k.chunk",
+                   "prefill_chunked_32k.prefill_s",
+                   "prefill_chunked_32k.interleave_latency_s",
+                   "prefill_chunked_32k.latency_reduction",
+                   "prefill_chunked_32k.prefill_overhead_frac"):
         require(path, obj, dotted)
     if len(FAILURES) == before:
         if not obj["modeled_decode_32k"]["speedup"] > 1.0:
             fail(path, "flash-decode speedup <= 1")
         if not 0 < obj["paged_decode_32k"]["reservation_ratio"] < 0.5:
             fail(path, "paged reservation_ratio not in (0, 0.5)")
+        # Chunked-prefill acceptance: one executable for every
+        # prompt-length mix, decode progress mid-prefill, and a chunk
+        # that actually buys interleave latency back.
+        if obj["measured"]["paged"]["prefill_executables"] != 1:
+            fail(path, "chunked paged prefill compiled != 1 executable")
+        if obj["prefill_chunked_interleave"]["prefill_executables"] != 1:
+            fail(path, "interleave cell compiled != 1 prefill executable")
+        if not obj["prefill_chunked_interleave"][
+                "decode_tokens_during_prefill"] > 0:
+            fail(path, "no decode tokens landed during long-prompt prefill")
+        if not obj["prefill_chunked_32k"]["latency_reduction"] > 1.0:
+            fail(path, "chunked prefill latency_reduction <= 1")
 
 
 SPECIFIC = {

@@ -416,6 +416,107 @@ def paged_decode_model(max_len: int, lengths: Iterable[int], n_heads: int,
     return out
 
 
+# Per-chunk dispatch overhead of the chunked-prefill executable: one host
+# enqueue + kernel launch per chunk (the fixed cost small chunks pay more
+# often — the MXU-efficiency side of the chunk-size trade).
+CHUNK_DISPATCH_S = 5e-6
+
+
+def prefill_chunk_model(prompt_len: int, chunk: int, n_heads: int,
+                        n_kv_heads: int, head_dim: int, page_size: int,
+                        in_bytes: int = 2,
+                        page_lookup_s: float = PAGE_LOOKUP_S,
+                        tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU) -> dict:
+    """Price chunked paged prefill of one ``prompt_len`` prompt at one
+    chunk size: per-chunk causal attention over the previously-written
+    pages plus the chunk itself, a page-table-lookup term per visited K/V
+    block (the software-TLB walk), and a per-chunk dispatch cost.
+
+    The chunk-size trade this exposes is the paper's TLB-reach argument at
+    serving granularity: big chunks amortize dispatch and run the MXU at
+    full tiles but stall interleaved decode ticks for the whole chunk
+    (``interleave_latency_s`` = the longest single chunk); small chunks
+    keep decode latency tight but pay the fixed costs per chunk and pad
+    the q tile below the MXU edge.
+
+    ``n_kv_heads`` is accepted for signature symmetry with
+    ``paged_decode_model`` but does not change the traffic: the prefill
+    grid (``flash_attention_paged``) is flattened over *q* heads, so K/V
+    blocks re-stream once per q head even under GQA — pricing per q head
+    is faithful to the kernel's actual DMA (the decode kernel's
+    b*kvh-flattened layout is what lets ``paged_decode_model`` price per
+    kv head instead).
+    """
+    del n_kv_heads
+    n_chunks = _ceil_div(prompt_len, chunk)
+    attn_s, lookup_s, visited_total, worst_chunk_s = 0.0, 0.0, 0, 0.0
+    for i in range(n_chunks):
+        skv = min((i + 1) * chunk, prompt_len)     # live rows after chunk i
+        p = AttnProblem(sq=chunk, skv=max(skv, chunk), n_heads=n_heads,
+                        head_dim=head_dim, causal=True, in_bytes=in_bytes)
+        c, _ = choose_attn_block(p, tpu, use_cache=False)
+        from repro.kernels.flash_attention import _largest_divisor
+        blk = AttnBlock(min(c.block_q, chunk),
+                        _largest_divisor(page_size, c.block_k))
+        t, terms = attn_cost(p, blk, tpu)
+        visited = terms["visited_blocks"]
+        chunk_s = t + visited * page_lookup_s + CHUNK_DISPATCH_S
+        attn_s += t
+        lookup_s += visited * page_lookup_s
+        visited_total += visited
+        worst_chunk_s = max(worst_chunk_s, chunk_s)
+    total_s = attn_s + lookup_s + n_chunks * CHUNK_DISPATCH_S
+    return {
+        "chunk": chunk,
+        "n_chunks": n_chunks,
+        "prefill_s": total_s,
+        "attn_s": attn_s,
+        "lookup_s": lookup_s,
+        "dispatch_s": n_chunks * CHUNK_DISPATCH_S,
+        "visited_blocks": visited_total,
+        "interleave_latency_s": worst_chunk_s,
+        "lookup_overhead_frac": lookup_s / attn_s if attn_s else 0.0,
+    }
+
+
+def choose_prefill_chunk(max_len: int, n_heads: int, n_kv_heads: int,
+                         head_dim: int, page_size: int,
+                         latency_weight: float = 4.0,
+                         in_bytes: int = 2,
+                         tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU
+                         ) -> Tuple[int, dict]:
+    """Pick the chunk size the serving engine prefills with.
+
+    Candidates are page-aligned powers-of-two multiples of ``page_size``
+    up to ``max_len``; the score charges the full-prompt prefill time plus
+    ``latency_weight`` times the interleave latency (every decode slot
+    waits out one chunk between its tokens while a prompt streams — the
+    weight is roughly how many stalled slots a chunk delay costs). The
+    engine consults this when ``ServeConfig.chunk_size`` is None.
+    """
+    assert 0 < page_size <= max_len, \
+        ("chunked prefill needs at least one page per chunk",
+         page_size, max_len)
+    cands = []
+    c = page_size
+    while c <= max_len:
+        cands.append(c)
+        c *= 2
+    if cands[-1] != max_len and max_len % page_size == 0:
+        cands.append(max_len)
+    best, best_score, best_terms = None, float("inf"), None
+    for cand in cands:
+        terms = prefill_chunk_model(max_len, cand, n_heads, n_kv_heads,
+                                    head_dim, page_size, in_bytes=in_bytes,
+                                    tpu=tpu)
+        score = terms["prefill_s"] \
+            + latency_weight * terms["interleave_latency_s"]
+        if score < best_score:
+            best, best_score, best_terms = cand, score, terms
+    return best, dict(best_terms, score_s=best_score,
+                      candidates=len(cands))
+
+
 # ----------------------------------------------------------------------------
 # Sharding selection for one weight-stationary matmul layer.
 # ----------------------------------------------------------------------------

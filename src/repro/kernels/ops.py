@@ -55,6 +55,21 @@ def flash_attention(q, k, v, causal: bool = True, block_q=None,
                                   block_k=block_k, interpret=_interpret())
 
 
+def flash_attention_paged(q, k_pages, v_pages, page_table, starts,
+                          block_q=None, block_k=None):
+    """Chunked-prefill causal attention against a paged KV pool: q
+    (b, sq, h, d) at global positions ``starts[i] + [0, sq)`` vs a
+    (n_pages, page_size, kvh, d) pool walked through ``page_table``.
+    The chunk's rows must already be written through the table."""
+    if block_q is not None:
+        block_q = _largest_divisor(q.shape[1], block_q)
+    if block_k is not None:
+        block_k = _largest_divisor(k_pages.shape[1], block_k)
+    return _flash.flash_attention_paged(
+        q, k_pages, v_pages, page_table, starts, block_q=block_q,
+        block_k=block_k, interpret=_interpret())
+
+
 def flash_decode(q, k, v, lengths, block_k=None):
     """Single-token GQA decode: q (b, h, d) vs ragged (b, max_len, kvh, d).
 

@@ -29,6 +29,9 @@ def main(argv=None):
     ap.add_argument("--paged", action="store_true",
                     help="KV rows from a shared page pool (serve/paged.py)")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="prefill chunk rows (paged; page-size multiple); "
+                         "default: the autotune chunk cost model's choice")
     ap.add_argument("--pool-frac", type=float, default=1.0,
                     help="pool size as a fraction of the contiguous "
                          "batch*max_len reservation (>= 1.0 keeps the "
@@ -50,7 +53,8 @@ def main(argv=None):
                            ServeConfig(max_len=args.max_len,
                                        batch=args.batch, paged=args.paged,
                                        page_size=args.page_size,
-                                       n_pages=n_pages))
+                                       n_pages=n_pages,
+                                       chunk_size=args.chunk_size))
     rng = np.random.RandomState(args.seed)
     t0 = time.time()
     for rid in range(args.requests):
@@ -66,7 +70,9 @@ def main(argv=None):
         occ = engine.pool.occupancy()
         print(f"  paged: {occ['high_water']}/{occ['n_pages'] - 1} pages "
               f"high-water ({args.page_size} rows each), "
-              f"{engine.admission_rejections} admission holds")
+              f"chunk={engine.chunk}, "
+              f"{engine.admission_rejections} admission holds, "
+              f"{engine.preemptions} preemptions")
     for rid in sorted(finished):
         print(f"  req {rid}: {finished[rid][:10]}...")
     return finished

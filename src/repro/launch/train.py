@@ -42,13 +42,15 @@ def build(cfg: T.ModelConfig, args, mesh=None):
                                     total_steps=args.steps)
     step = steps_mod.make_train_step(cfg, sched=sched,
                                      accum_steps=args.accum,
-                                     compress_grads=args.compress_grads)
+                                     compress_grads=args.compress_grads,
+                                     error_feedback=args.error_feedback)
     step = jax.jit(step, donate_argnums=(0,))
 
     def init_fn():
         with shd.use_ruleset(ruleset):
-            return steps_mod.init_state(jax.random.PRNGKey(args.seed),
-                                        cfg).tree()
+            return steps_mod.init_state(
+                jax.random.PRNGKey(args.seed), cfg,
+                error_feedback=args.error_feedback).tree()
 
     def wrapped_step(state, batch):
         with shd.use_ruleset(ruleset):
@@ -94,9 +96,15 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--fsdp", action="store_true")
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="carry the int8 quantization residual in "
+                         "TrainState (EF-SGD: bias-free compression); "
+                         "implies --compress-grads")
     ap.add_argument("--mesh", default="none",
                     choices=["none", "single", "multi"])
     args, extra = ap.parse_known_args(argv)
+    if args.error_feedback:
+        args.compress_grads = True
 
     maybe_init_distributed()
     cfg = configs.get_smoke(args.arch) if args.smoke \

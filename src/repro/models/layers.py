@@ -207,8 +207,8 @@ def attention_apply(params: Params, cfg: AttnConfig, x, positions=None,
             positions = positions + (idx[:, None] if idx.ndim == 1 else idx)
     q, k, v = _project_qkv(params, cfg, x, positions)
     if cache is not None and "kp" in cache:
-        return _paged_decode_apply(params, cfg, x, q, k, v, cache,
-                                   use_flash=use_flash)
+        return _paged_apply(params, cfg, x, q, k, v, cache,
+                            use_flash=use_flash)
     if cache is not None:
         idx = cache["index"]
         if idx.ndim == 1:
@@ -266,48 +266,63 @@ def attention_apply(params: Params, cfg: AttnConfig, x, positions=None,
     return sharding.shard(y, "batch", "seq", "embed"), new_cache
 
 
-def _paged_decode_apply(params: Params, cfg: AttnConfig, x, q, k, v,
-                        cache: Params, use_flash: bool):
-    """Single-token decode against a paged KV cache (``serve.paged``).
+def _paged_apply(params: Params, cfg: AttnConfig, x, q, k, v,
+                 cache: Params, use_flash: bool):
+    """Attention against a paged KV cache (``serve.paged``): single-token
+    decode (s == 1) and in-place chunked prefill (s > 1) share one path.
 
     cache = {"kp"/"vp": (n_pages, page_size, kvh, hd) shared pool,
     "pages": (b, max_pages) per-slot page table (0 = null page),
-    "index": (b,) per-slot write position}. The new K/V row scatters
-    through the table; freed/idle slots (zeroed table rows) land in the
-    null page, so they can never corrupt a live slot's pages.
+    "index": (b,) per-slot write position}. The s new K/V rows scatter
+    through the table (write-then-attend: the chunk attends its own
+    prefix); freed/idle slots (zeroed table rows) and positions at/past
+    the table's reach land in the null page, so they can never corrupt a
+    live slot's pages.
     """
     b, s, _ = x.shape
-    assert s == 1, ("paged KV caches serve single-token decode only; "
-                    "prefill goes through contiguous row caches", s)
     idx = cache["index"]                       # (b,) per-slot lengths
     page_size = cache["kp"].shape[1]
     max_pages = cache["pages"].shape[1]
-    pj = jnp.clip(idx // page_size, 0, max_pages - 1)
-    page = cache["pages"][jnp.arange(b), pj]   # (b,) physical page
+    pos = idx[:, None] + jnp.arange(s)[None, :]          # (b, s) global
+    pj = jnp.clip(pos // page_size, 0, max_pages - 1)
+    page = jnp.take_along_axis(cache["pages"], pj, axis=1)   # (b, s)
     # A write position past the table's reach (a slot decoding beyond
     # max_len, or a freed slot drifting) must land in the null page — the
     # contiguous path drops the out-of-bounds scatter; clipping pj alone
     # would overwrite row 0 of the slot's *last* live page instead.
-    page = jnp.where(idx < max_pages * page_size, page, 0)
-    row = idx % page_size
-    kp = cache["kp"].at[page, row].set(k[:, 0].astype(cache["kp"].dtype))
-    vp = cache["vp"].at[page, row].set(v[:, 0].astype(cache["vp"].dtype))
-    lengths = idx + 1
+    page = jnp.where(pos < max_pages * page_size, page, 0)
+    row = pos % page_size
+    kp = cache["kp"].at[page, row].set(k.astype(cache["kp"].dtype))
+    vp = cache["vp"].at[page, row].set(v.astype(cache["vp"].dtype))
+    lengths = idx + s
     new_cache = {"kp": kp, "vp": vp, "pages": cache["pages"],
-                 "index": idx + 1}
-    if use_flash and not cfg.expand_kv:
+                 "index": idx + s}
+    if use_flash and s == 1 and not cfg.expand_kv:
         from repro.kernels import ops as kernel_ops
         out = kernel_ops.flash_decode_paged(
             q[:, 0], kp.astype(q.dtype), vp.astype(q.dtype),
             cache["pages"], lengths)[:, None]
+    elif use_flash and not cfg.expand_kv:
+        # Chunked prefill: the chunk's rows are already in the pool, so
+        # the paged causal kernel streams every previously-written page
+        # plus the chunk itself (queries sit at positions idx + [0, s)).
+        from repro.kernels import ops as kernel_ops
+        out = kernel_ops.flash_attention_paged(
+            q, kp.astype(q.dtype), vp.astype(q.dtype), cache["pages"], idx)
     else:
         # Reference path: materialize the contiguous view via a
-        # page-table gather, then mask with the live lengths.
+        # page-table gather, then mask causally per slot (query idx+i may
+        # only see positions <= idx+i; at s == 1 this is the kv_lengths
+        # mask).
         from repro.serve import paged as paged_mod
         ck, cv = paged_mod.gather_kv(kp, vp, cache["pages"])
-        out = sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype),
-                   kv_lengths=lengths, expand_kv=cfg.expand_kv,
-                   probs_fp32=cfg.probs_fp32)
+        skv = ck.shape[1]
+        qi = jnp.arange(s)[None, :, None]
+        kj = jnp.arange(skv)[None, None, :]
+        mask = jnp.where(kj <= idx[:, None, None] + qi, 0.0,
+                         -1e30).astype(jnp.float32)
+        out = sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), mask=mask,
+                   expand_kv=cfg.expand_kv, probs_fp32=cfg.probs_fp32)
     out = sharding.shard(out, "batch", "seq", "heads", "head_dim")
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
     return sharding.shard(y, "batch", "seq", "embed"), new_cache

@@ -22,10 +22,25 @@ KV/SSM cache of the cell's sequence length, caches donated in-place.
     streams only each slot's live K/V blocks (O(context), not O(max_len)).
   * **Paged KV** (``ServeConfig.paged``) — slots stop reserving ``max_len``
     rows each: K/V rows live in a shared page pool (``serve.paged``) and
-    each slot owns a page table. Admission allocates the prompt's pages
-    (rejecting cleanly when the pool is short — the request stays queued),
-    decode allocates lazily one page at a time as contexts grow, and
-    freeing a slot returns its pages for immediate reuse.
+    each slot owns a page table. Admission allocates the first prompt
+    chunk's pages (rejecting cleanly when the pool is short — the request
+    stays queued), decode allocates lazily one page at a time as contexts
+    grow, and freeing a slot returns its pages for immediate reuse.
+  * **Chunked paged prefill** — prompts are written *in place* through the
+    page table in fixed-size chunks (``ServeConfig.chunk_size``, default
+    from the autotune chunk cost model): one jitted chunk executable total
+    — not one per bucket — runs one chunk per mid-prefill slot per tick,
+    so decode ticks keep making progress while a long prompt streams in.
+    There is no contiguous row cache and no install scatter: the chunk's
+    K/V rows land in their pages as they are computed, VMEM stays bounded
+    at one chunk, and pages are pre-allocated per chunk right before the
+    chunk that writes them.
+  * **Preemption** — pool exhaustion mid-decode (or mid-prefill) preempts
+    the youngest slot instead of raising: its pages return to the pool and
+    its request re-queues at the head with generated tokens preserved
+    (re-prefilled as prompt context on re-admission). Counted in
+    ``engine.preemptions``; only a pool with nothing left to preempt still
+    raises ``PagePoolExhausted``.
 """
 
 from __future__ import annotations
@@ -54,6 +69,9 @@ class ServeConfig:
     n_pages: Optional[int] = None  # pool size incl. null page; None ->
     # the contiguous equivalent (batch * max_len / page_size + 1), i.e.
     # no savings but no exhaustion risk; size it down to reclaim HBM.
+    chunk_size: Optional[int] = None  # prefill chunk rows (paged=True);
+    # must be a page_size multiple; None -> the autotune chunk cost
+    # model's choice (``core.autotune.choose_prefill_chunk``).
 
 
 def prefill(params, cfg: T.ModelConfig, tokens, caches,
@@ -162,8 +180,20 @@ class ServingEngine:
             self.caches = T.init_paged_caches(
                 cfg, serve_cfg.batch, serve_cfg.max_len,
                 serve_cfg.page_size, n_pages)
+            chunk = serve_cfg.chunk_size
+            if chunk is None:
+                from repro.core import autotune
+                chunk, _ = autotune.choose_prefill_chunk(
+                    serve_cfg.max_len, cfg.n_heads, cfg.n_kv_heads,
+                    cfg.dhead, serve_cfg.page_size)
+            assert chunk % serve_cfg.page_size == 0 \
+                and 0 < chunk <= serve_cfg.max_len, \
+                (chunk, serve_cfg.page_size, serve_cfg.max_len)
+            self.chunk: Optional[int] = chunk
+            self._chunk_fn = self._make_chunk_fn()
         else:
             self.pool = None
+            self.chunk = None
             self.caches = T.init_caches(cfg, serve_cfg.batch,
                                         serve_cfg.max_len,
                                         per_slot_index=True)
@@ -176,6 +206,10 @@ class ServingEngine:
         self.prefill_traces: Dict[int, int] = {}
         self.decode_traces = 0
         self.admission_rejections = 0     # pool-exhausted admission holds
+        self.preemptions = 0              # slots evicted back to the queue
+        self._prefilling: Dict[int, int] = {}   # slot -> prompt rows written
+        self._slot_seq: Dict[int, int] = {}     # slot -> admission sequence
+        self._admit_seq = 0
         self._step = self._make_decode_step()
 
     # -- jitted executables ---------------------------------------------------
@@ -200,13 +234,10 @@ class ServingEngine:
         return min(b, self.scfg.max_len)
 
     def _prefill_fn(self, bucket: int) -> Callable:
-        """One jitted prefill-install-sample executable per bucket."""
+        """One jitted prefill-install-sample executable per bucket
+        (contiguous caches only — the paged engine prefills in chunks)."""
         fn = self._prefill_fns.get(bucket)
         if fn is not None:
-            return fn
-        if self.pool is not None:
-            fn = self._paged_prefill_fn(bucket)
-            self._prefill_fns[bucket] = fn
             return fn
         cfg, scfg = self.cfg, self.scfg
         pick = sampler(scfg.temperature)
@@ -236,52 +267,63 @@ class ServingEngine:
         self._prefill_fns[bucket] = fn
         return fn
 
-    def _paged_prefill_fn(self, bucket: int) -> Callable:
-        """Paged install: prefill runs on a contiguous *row* cache (the
-        model's prompt pass is unchanged), then the row's K/V scatters
-        through the slot's page table into each layer's pool. Positions
-        past the allocated pages walk null (0) table entries and land in
-        the null page — padded bucket rows can never touch live pages."""
+    def _make_chunk_fn(self) -> Callable:
+        """The one jitted chunked-prefill executable (chunk size is fixed,
+        so this traces exactly once no matter the prompt-length mix).
+
+        Runs one ``chunk``-token slice of one slot's prompt *in place*
+        through the page table: the model forward sees a batch-1 view of
+        the shared pools (this slot's table row, write position =
+        ``start``), the chunk's K/V rows scatter into their pages as they
+        are computed (``layers._paged_apply``), and the logit at
+        ``last_in_chunk`` is sampled — the host uses it only on the final
+        chunk. ``end`` (true prompt length on a padded final chunk)
+        overwrites the slot's write position so padded rows are never
+        attended. No row cache, no install scatter."""
         cfg, scfg = self.cfg, self.scfg
-        ps = scfg.page_size
-        n_rows = paged_mod.pages_for(bucket, ps) * ps   # page-aligned
         pick = sampler(scfg.temperature)
+        chunk = self.chunk
 
-        def prefill_into_slot(params, tokens, true_len, slot, caches, key):
-            self.prefill_traces[bucket] = \
-                self.prefill_traces.get(bucket, 0) + 1   # trace-time only
-            row = T.init_caches(cfg, 1, n_rows, per_slot_index=True)
-            logits, row, _ = T.forward(params, cfg, tokens, caches=row)
-            last = jax.lax.dynamic_index_in_dim(logits, true_len - 1,
-                                                axis=1, keepdims=False)
-            pos = jnp.arange(n_rows)
-            new_caches = []
-            for c, r in zip(caches, row):
-                table = c["pages"][0, slot]          # same for every period
-                page_of = table[pos // ps]
-                row_of = pos % ps
-                # r["k"]: (periods, 1, n_rows, kvh, d) -> pool scatter at
-                # (period, page_of[t], row_of[t]).
-                kp = c["kp"].at[:, page_of, row_of].set(
-                    r["k"][:, 0].astype(c["kp"].dtype))
-                vp = c["vp"].at[:, page_of, row_of].set(
-                    r["v"][:, 0].astype(c["vp"].dtype))
-                index = c["index"].at[:, slot].set(true_len)
-                new_caches.append(dict(c, kp=kp, vp=vp, index=index))
-            return pick(last[0], key), new_caches
+        def prefill_chunk(params, tokens, start, end, last_in_chunk, slot,
+                          caches, key):
+            # tokens: (1, chunk); start: rows already written; end: live
+            # rows after this chunk.
+            self.prefill_traces[chunk] = \
+                self.prefill_traces.get(chunk, 0) + 1    # trace-time only
+            view = []
+            for c in caches:
+                pages = jax.lax.dynamic_slice_in_dim(c["pages"], slot, 1,
+                                                     axis=1)
+                idx = jnp.full((c["index"].shape[0], 1), start,
+                               c["index"].dtype)
+                view.append(dict(c, pages=pages, index=idx))
+            logits, view, _ = T.forward(params, cfg, tokens, caches=view)
+            last = jax.lax.dynamic_index_in_dim(logits[0], last_in_chunk,
+                                                axis=0, keepdims=False)
+            new_caches = [
+                dict(c, kp=v["kp"], vp=v["vp"],
+                     index=c["index"].at[:, slot].set(end))
+                for c, v in zip(caches, view)
+            ]
+            return pick(last, key), new_caches
 
-        return jax.jit(prefill_into_slot, donate_argnums=(4,))
+        return jax.jit(prefill_chunk, donate_argnums=(6,))
 
     # -- page-table plumbing --------------------------------------------------
 
-    def _set_page_table_row(self, slot: int, pages: List[int]) -> None:
-        """Install a slot's logical->physical map in every layer cache."""
-        max_pages = self.scfg.max_len // self.scfg.page_size
-        table = np.zeros((max_pages,), np.int32)
-        table[:len(pages)] = pages
-        table = jnp.asarray(table)
-        self.caches = [dict(c, pages=c["pages"].at[:, slot].set(table))
-                       for c in self.caches]
+    def _append_pages(self, slot: int, pages: List[int]) -> None:
+        """Extend a slot's logical->physical map in every layer cache
+        (entries [have, have+n) — chunked prefill and lazy decode growth
+        both append, never overwrite live entries)."""
+        if not pages:
+            return
+        have = len(self.pool.slot_pages[slot]) - len(pages)
+        cols = jnp.arange(have, have + len(pages))
+        vals = jnp.asarray(pages, jnp.int32)
+        self.caches = [
+            dict(c, pages=c["pages"].at[:, slot, cols].set(vals))
+            for c in self.caches
+        ]
 
     def _pages_through_tick(self, slot: Request) -> int:
         """Table entries ``slot`` must have for this tick's decode write.
@@ -297,29 +339,79 @@ class ServingEngine:
         return min(length // self.scfg.page_size + 1, max_pages)
 
     def _ensure_decode_pages(self) -> None:
-        """Lazily grow each active slot's table so the next decode token's
-        write position is backed by a real page (admission only reserved
-        the prompt's pages). Raises ``PagePoolExhausted`` when the pool
-        can't cover an already-admitted slot — size ``n_pages`` for the
-        decode growth you admit (see serve/README.md)."""
+        """Lazily grow each decode-active slot's table so the next decode
+        token's write position is backed by a real page (admission only
+        reserved the first chunk's pages). A short pool preempts the
+        youngest other slot (``_preempt_for``); only a pool with nothing
+        left to preempt raises ``PagePoolExhausted``."""
         if self.pool is None:
             return
         for i, slot in enumerate(self.slots):
-            if slot is None:
+            if slot is None or i in self._prefilling:
                 continue
             target = self._pages_through_tick(slot)
             while len(self.pool.slot_pages.get(i, ())) < target:
-                have = len(self.pool.slot_pages.get(i, ()))
-                pid = self.pool.alloc(i, 1)[0]
-                self.caches = [
-                    dict(c, pages=c["pages"].at[:, i, have].set(pid))
-                    for c in self.caches
-                ]
+                if not self._preempt_for(1, protect={i}):
+                    raise paged_mod.PagePoolExhausted(
+                        f"slot {i} needs a decode page and no other slot "
+                        f"is left to preempt; raise n_pages")
+                self._append_pages(i, self.pool.alloc(i, 1))
+
+    # -- preemption -----------------------------------------------------------
+
+    def _preempt_for(self, need: int, protect: set) -> bool:
+        """Free pages until ``need`` are available by preempting the
+        youngest (latest-admitted) slots outside ``protect``. Returns
+        False when no victim is left (the caller decides whether that is
+        a stall or a crash)."""
+        if self.pool is None:
+            return False
+        while not self.pool.can_alloc(need):
+            victims = [i for i, s in enumerate(self.slots)
+                       if s is not None and i not in protect]
+            if not victims:
+                return False
+            self._preempt(max(victims, key=lambda i: self._slot_seq[i]))
+        return True
+
+    def _preempt(self, i: int) -> None:
+        """Evict slot ``i`` back to the head of the queue: its pages
+        return to the pool and its generated tokens are preserved — on
+        re-admission they prefill as prompt context and generation
+        continues where it stopped."""
+        req = self.slots[i]
+        self.preemptions += 1
+        self.free_slot(i)
+        self.last_tok = self.last_tok.at[i].set(0)
+        if len(req.prompt) + len(req.generated) >= self.scfg.max_len:
+            # Context already at the cache boundary: nothing re-prefillable
+            # remains (the contiguous engine would be spilling writes too),
+            # so finish with what it generated instead of requeueing an
+            # unservable request.
+            req.done = True
+            self.finished[req.rid] = req.generated
+            return
+        self.queue.insert(0, req)
 
     # -- request lifecycle ----------------------------------------------------
 
     def submit(self, req: Request):
         self.queue.append(req)
+
+    def _effective_prompt(self, req: Request) -> np.ndarray:
+        """The rows a (re-)admission must prefill: the original prompt
+        plus any tokens generated before a preemption."""
+        prompt = np.asarray(req.prompt, np.int32)
+        if req.generated:
+            prompt = np.concatenate(
+                [prompt, np.asarray(req.generated, np.int32)])
+        return prompt
+
+    @staticmethod
+    def _effective_len(req: Request) -> int:
+        """len(_effective_prompt(req)) without materializing it — the
+        admission-headroom and chunk-accounting paths only need lengths."""
+        return len(req.prompt) + len(req.generated)
 
     def context_lengths(self) -> np.ndarray:
         """Per-slot live KV length (prompt + generated so far), shape
@@ -352,6 +444,8 @@ class ServingEngine:
         slot's drifting writes land in the null page, never in a page the
         pool may immediately re-assign."""
         self.slots[i] = None
+        self._prefilling.pop(i, None)
+        self._slot_seq.pop(i, None)
         if self.pool is not None:
             self.pool.free_slot(i)
             self.caches = [
@@ -366,49 +460,72 @@ class ServingEngine:
             ]
 
     def _imminent_page_need(self) -> int:
-        """Pages ``_ensure_decode_pages`` will take for committed slots
-        this tick. Admission must leave this headroom: a new request that
-        grabs the pool's last page and strands an already-admitted slot's
-        boundary crossing turns a clean hold into a mid-tick crash."""
-        return sum(
-            max(0, self._pages_through_tick(slot)
-                - len(self.pool.slot_pages.get(i, ())))
-            for i, slot in enumerate(self.slots) if slot is not None)
+        """Pages committed slots will take this tick: decode growth for
+        decode-active slots, the *next chunk* for mid-prefill slots.
+        Admission must leave this headroom: a new request that grabs the
+        pool's last page and strands an already-admitted slot turns a
+        clean hold into a preemption."""
+        ps, max_len = self.scfg.page_size, self.scfg.max_len
+        total = 0
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            have = len(self.pool.slot_pages.get(i, ()))
+            if i in self._prefilling:
+                cursor = self._prefilling[i]
+                true_len = self._effective_len(slot)
+                total += paged_mod.chunk_page_need(
+                    cursor, min(self.chunk, true_len - cursor), have, ps,
+                    max_len)
+            else:
+                total += max(0, self._pages_through_tick(slot) - have)
+        return total
 
     def _admit(self):
         for i, slot in enumerate(self.slots):
             if slot is None and self.queue:
                 req = self.queue[0]
-                prompt = np.asarray(req.prompt, np.int32)
-                bucket = self.bucket_for(len(prompt))
-                assert len(prompt) <= bucket <= self.scfg.max_len, \
-                    (len(prompt), bucket, self.scfg.max_len)
                 if self.pool is not None:
-                    # Reserve the prompt's pages up front; a short pool
-                    # rejects cleanly — the request stays queued (FIFO:
-                    # later requests wait too) and retries next tick,
-                    # after finished slots return pages. The check covers
-                    # the prompt, this slot's first decode write (which
-                    # lands this same tick), and the imminent growth of
+                    # Chunked admission needs only the length (tokens are
+                    # materialized chunk-by-chunk in _prefill_tick) and
+                    # reserves only the *first chunk's* pages; a short
+                    # pool rejects cleanly — the request stays queued
+                    # (FIFO: later requests wait too) and retries next
+                    # tick, after finished slots return pages. The
+                    # headroom check also covers the imminent growth of
                     # already-committed slots.
                     ps = self.scfg.page_size
-                    need = paged_mod.pages_for(len(prompt), ps)
-                    # The admission bar is prompt pages + the first decode
-                    # write (which lands this same tick) — a request over
-                    # the pool's *capacity* on that bar can never admit,
-                    # so fail loudly instead of holding it forever.
+                    plen = self._effective_len(req)
+                    assert plen <= self.scfg.max_len, \
+                        (plen, self.scfg.max_len)
+                    # A request over the pool's *capacity* (whole prompt +
+                    # its first decode write) can never finish even with
+                    # every other slot preempted, so fail loudly instead
+                    # of holding it forever.
                     with_decode = paged_mod.pages_for(
-                        min(len(prompt) + 1, self.scfg.max_len), ps)
+                        min(plen + 1, self.scfg.max_len), ps)
                     if with_decode > self.pool.n_pages - 1:
                         raise paged_mod.PagePoolExhausted(
                             f"request {req.rid}: needs {with_decode} pages "
                             f"but the pool holds {self.pool.n_pages - 1}; "
                             f"raise n_pages or page_size")
+                    first = paged_mod.chunk_page_need(
+                        0, min(self.chunk, plen), 0, ps, self.scfg.max_len)
                     if not self.pool.can_alloc(
-                            with_decode + self._imminent_page_need()):
+                            first + self._imminent_page_need()):
                         self.admission_rejections += 1
                         break
-                    self._set_page_table_row(i, self.pool.alloc(i, need))
+                    self.queue.pop(0)
+                    self.slots[i] = req
+                    self._prefilling[i] = 0
+                    self._slot_seq[i] = self._admit_seq
+                    self._admit_seq += 1
+                    self._append_pages(i, self.pool.alloc(i, first))
+                    continue          # chunks run in _prefill_tick
+                prompt = self._effective_prompt(req)
+                bucket = self.bucket_for(len(prompt))
+                assert len(prompt) <= bucket <= self.scfg.max_len, \
+                    (len(prompt), bucket, self.scfg.max_len)
                 self.queue.pop(0)
                 padded = np.zeros((1, bucket), np.int32)
                 padded[0, :len(prompt)] = prompt
@@ -417,17 +534,65 @@ class ServingEngine:
                     jnp.int32(len(prompt)), jnp.int32(i), self.caches,
                     self._next_key())
                 self.slots[i] = req
+                self._slot_seq[i] = self._admit_seq
+                self._admit_seq += 1
                 tok = int(np.asarray(tok))
                 if not self._record(i, req, tok):
                     self.last_tok = self.last_tok.at[i].set(tok)
 
+    def _prefill_tick(self) -> None:
+        """Advance every mid-prefill slot by one chunk (the interleave
+        unit: between chunks the decode step below keeps every active
+        stream moving). Each chunk's pages are pre-allocated right here,
+        immediately before the chunk that writes them; a short pool
+        preempts younger slots, or — with nothing to preempt — stalls
+        this slot's prefill for the tick (decode ticks still run and
+        eventually return pages)."""
+        ps, max_len = self.scfg.page_size, self.scfg.max_len
+        for i in sorted(self._prefilling):
+            if i not in self._prefilling:      # preempted by an earlier
+                continue                       # slot's chunk this tick
+            req = self.slots[i]
+            cursor = self._prefilling[i]
+            prompt = self._effective_prompt(req)
+            true_len = len(prompt)
+            n = min(self.chunk, true_len - cursor)
+            need = paged_mod.chunk_page_need(
+                cursor, n, len(self.pool.slot_pages.get(i, ())), ps,
+                max_len)
+            if need:
+                if not self._preempt_for(need, protect={i}):
+                    continue                   # stalled, retry next tick
+                self._append_pages(i, self.pool.alloc(i, need))
+            chunk_toks = np.zeros((1, self.chunk), np.int32)
+            chunk_toks[0, :n] = prompt[cursor:cursor + n]
+            end = cursor + n
+            # Padded final-chunk rows sit at/past true_len: `end` resets
+            # the write position so they are never attended, and the
+            # sampled logit row is the prompt's true last token.
+            last_in = (true_len - 1 - cursor) if end == true_len else n - 1
+            tok, self.caches = self._chunk_fn(
+                self.params, jnp.asarray(chunk_toks), jnp.int32(cursor),
+                jnp.int32(end), jnp.int32(last_in), jnp.int32(i),
+                self.caches, self._next_key())
+            if end < true_len:
+                self._prefilling[i] = end
+                continue
+            del self._prefilling[i]            # prefill complete
+            tok = int(np.asarray(tok))
+            if not self._record(i, req, tok):
+                self.last_tok = self.last_tok.at[i].set(tok)
+
     def tick(self) -> int:
-        """Admit + one decode step for all active slots; returns #active."""
+        """Admit, advance prefill chunks, one decode step for all
+        decode-active slots; returns #slots making progress."""
         self._admit()
+        self._prefill_tick()
         self._ensure_decode_pages()
-        active = [i for i, s in enumerate(self.slots) if s is not None]
+        active = [i for i, s in enumerate(self.slots)
+                  if s is not None and i not in self._prefilling]
         if not active:
-            return 0
+            return len(self._prefilling)
         nxt, self.caches = self._step(self.params, self.last_tok,
                                       self.caches, self._next_key())
         nxt_host = np.asarray(nxt).copy()
@@ -440,7 +605,17 @@ class ServingEngine:
             # output can't alias eos_id (and decodes stay deterministic).
             nxt_host[i] = 0
         self.last_tok = jnp.asarray(nxt_host, jnp.int32)
-        return len(active)
+        if self._prefilling:
+            # The batched decode step advanced every slot's write position
+            # and wrote one garbage K/V row for mid-prefill slots (at the
+            # cursor — the next chunk overwrites it, or in the null page).
+            # Reset their positions so the next chunk resumes correctly.
+            items = sorted(self._prefilling.items())
+            cols = jnp.asarray([i for i, _ in items], jnp.int32)
+            vals = jnp.asarray([v for _, v in items], jnp.int32)
+            self.caches = [dict(c, index=c["index"].at[:, cols].set(vals))
+                           for c in self.caches]
+        return len(active) + len(self._prefilling)
 
     def run_until_drained(self, max_ticks: int = 10000) -> Dict[int, List[int]]:
         for _ in range(max_ticks):

@@ -20,6 +20,9 @@ Pieces:
 * Reservation accounting — ``rows_resident`` / ``reservation`` report the
   HBM the paged layout actually holds vs the contiguous ``slots*max_len``
   reservation, the headline number in ``benchmarks/tpu_serving.py``.
+* ``chunk_page_need`` — the chunked-prefill allocation unit: how many
+  pages a slot must add before streaming one prompt chunk through its
+  table (admission headroom and the prefill scheduler share it).
 
 The physical pools themselves live in the model caches (one pool per
 pattern position, stacked over periods — see
@@ -44,6 +47,23 @@ class PagePoolExhausted(RuntimeError):
 def pages_for(n_rows: int, page_size: int) -> int:
     """Pages needed to hold ``n_rows`` KV rows."""
     return -(-int(n_rows) // page_size)
+
+
+def chunk_page_need(cursor: int, chunk_rows: int, pages_held: int,
+                    page_size: int, max_rows: int) -> int:
+    """Pages a slot must *add* before writing rows [cursor, cursor+chunk).
+
+    The chunked-prefill allocation unit: a slot holding ``pages_held``
+    pages about to stream one chunk through its table needs table entries
+    through ``min(cursor + chunk_rows, max_rows)`` (rows past ``max_rows``
+    spill to the null page and need no backing). ``_admit`` uses it with
+    cursor=0/pages_held=0 to price a request's first chunk, and the
+    prefill scheduler re-prices every subsequent chunk with the same
+    function so admission headroom and mid-prefill growth can never
+    disagree.
+    """
+    end = min(int(cursor) + int(chunk_rows), int(max_rows))
+    return max(0, pages_for(end, page_size) - int(pages_held))
 
 
 @dataclasses.dataclass

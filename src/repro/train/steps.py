@@ -23,19 +23,32 @@ class TrainState:
     params: Any
     opt: Dict[str, Any]
     step: Any                  # scalar int32
+    ef: Any = None             # error-feedback residual (compressed grads)
 
     def tree(self):
-        return {"params": self.params, "opt": self.opt, "step": self.step}
+        t = {"params": self.params, "opt": self.opt, "step": self.step}
+        if self.ef is not None:
+            # Optional leaf: plain compressed / uncompressed runs keep the
+            # exact state pytree older checkpoints and the dry-run's
+            # sharding derivation expect.
+            t["ef"] = self.ef
+        return t
 
     @classmethod
     def from_tree(cls, t):
-        return cls(params=t["params"], opt=t["opt"], step=t["step"])
+        return cls(params=t["params"], opt=t["opt"], step=t["step"],
+                   ef=t.get("ef"))
 
 
-def init_state(key, cfg: T.ModelConfig) -> TrainState:
+def init_state(key, cfg: T.ModelConfig,
+               error_feedback: bool = False) -> TrainState:
     params = T.init_params(key, cfg)
+    ef = None
+    if error_feedback:
+        from repro.dist import compression
+        ef = compression.ErrorFeedback.init(params)
     return TrainState(params=params, opt=adamw.adamw_init(params),
-                      step=jnp.zeros((), jnp.int32))
+                      step=jnp.zeros((), jnp.int32), ef=ef)
 
 
 def cross_entropy(logits, labels):
@@ -59,8 +72,18 @@ def make_train_step(cfg: T.ModelConfig,
                     opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
                     clip_norm: float = 1.0,
                     accum_steps: int = 1,
-                    compress_grads: bool = False):
-    """Returns step(state_tree, batch) -> (state_tree, metrics)."""
+                    compress_grads: bool = False,
+                    error_feedback: bool = False):
+    """Returns step(state_tree, batch) -> (state_tree, metrics).
+
+    ``compress_grads`` quantizes gradients to int8 on the wire;
+    ``error_feedback`` additionally carries the per-step quantization
+    error in ``TrainState.ef`` and re-injects it next step (EF-SGD), so
+    compressed training is bias-free — the state must come from
+    ``init_state(..., error_feedback=True)``.
+    """
+    assert not error_feedback or compress_grads, \
+        "error_feedback rides on compress_grads"
 
     def grads_of(params, batch):
         (loss, parts), grads = jax.value_and_grad(
@@ -90,14 +113,21 @@ def make_train_step(cfg: T.ModelConfig,
             grads = jax.tree.map(lambda g: g / accum_steps, grads)
             loss = loss / accum_steps
             parts = {"nll": loss, "aux": jnp.zeros((), jnp.float32)}
+        ef = state.ef
         if compress_grads:
             from repro.dist import compression
-            grads = compression.int8_roundtrip(grads)
+            if error_feedback:
+                assert ef is not None, \
+                    "init_state(..., error_feedback=True) required"
+                grads, ef = compression.ErrorFeedback.compress(grads, ef)
+            else:
+                grads = compression.int8_roundtrip(grads)
         grads, gnorm = adamw.clip_by_global_norm(grads, clip_norm)
         lr = schedule.learning_rate(state.step, sched)
         params, opt = adamw.adamw_update(grads, state.opt, state.params, lr,
                                          opt_cfg)
-        new_state = TrainState(params=params, opt=opt, step=state.step + 1)
+        new_state = TrainState(params=params, opt=opt, step=state.step + 1,
+                               ef=ef)
         metrics = {"loss": loss, "nll": parts["nll"], "aux": parts["aux"],
                    "grad_norm": gnorm, "lr": lr}
         return new_state.tree(), metrics

@@ -144,3 +144,35 @@ def test_tuning_cache_roundtrip(tmp_path, monkeypatch):
     assert cfg2 == cfg
     assert terms2["cached"] is True
     assert terms2["time_s"] == pytest.approx(terms["time_s"])
+
+
+# ----------------------------------------------------------------------------
+# Chunked-prefill cost model
+# ----------------------------------------------------------------------------
+
+def test_prefill_chunk_model_terms():
+    """The chunk-size trade's two ends: the whole-prompt 'chunk' has the
+    worst interleave latency (one chunk = the whole prefill), small chunks
+    pay more dispatches; the lookup term scales with visited blocks."""
+    dims = dict(n_heads=32, n_kv_heads=8, head_dim=128, page_size=256)
+    small = autotune.prefill_chunk_model(8192, 256, **dims)
+    whole = autotune.prefill_chunk_model(8192, 8192, **dims)
+    assert small["n_chunks"] == 32 and whole["n_chunks"] == 1
+    assert small["interleave_latency_s"] < whole["interleave_latency_s"]
+    assert small["dispatch_s"] > whole["dispatch_s"]
+    assert whole["interleave_latency_s"] == pytest.approx(
+        whole["prefill_s"])
+    for terms in (small, whole):
+        assert terms["prefill_s"] == pytest.approx(
+            terms["attn_s"] + terms["lookup_s"] + terms["dispatch_s"])
+        assert terms["lookup_s"] > 0
+
+
+def test_choose_prefill_chunk_is_page_aligned_and_bounded():
+    chunk, terms = autotune.choose_prefill_chunk(
+        32768, n_heads=32, n_kv_heads=8, head_dim=128, page_size=256)
+    assert chunk % 256 == 0 and 256 <= chunk <= 32768
+    assert terms["score_s"] >= terms["prefill_s"]
+    # A chunk far below max_len must win once latency is priced at all:
+    # whole-prompt prefill stalls every decode slot for the full prompt.
+    assert chunk < 32768

@@ -1,0 +1,236 @@
+"""Chunked paged prefill: chunk-by-chunk page-table writes must reproduce
+the whole-prompt contiguous oracle exactly (cache contents bit-for-bit,
+outputs numerically), one chunk executable must serve every prompt-length
+mix, decode ticks must keep moving while a long prompt is mid-prefill, and
+pool exhaustion must preempt the youngest slot instead of raising."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.models import layers, transformer as T
+from repro.serve import paged
+from repro.serve.engine import (Request, ServeConfig, ServingEngine,
+                                greedy_generate)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get_smoke("qwen3-4b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _chunked_cfg(**kw):
+    base = dict(max_len=64, batch=2, eos_id=-1, paged=True, page_size=8,
+                chunk_size=8)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+# ----------------------------------------------------------------------------
+# Layer-level property: chunked == whole-prompt oracle
+# ----------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 50), kvh=st.sampled_from([1, 2, 4]),
+       chunk_pages=st.sampled_from([1, 2, 3]),   # 1 page, 2 pages, odd
+       use_flash=st.booleans())
+@settings(max_examples=10, deadline=None)
+def test_chunked_prefill_matches_whole_prompt_oracle(seed, kvh, chunk_pages,
+                                                     use_flash):
+    """Property: prefilling a prompt through ``attention_apply`` in
+    page-table chunks gives the whole-prompt contiguous oracle's outputs,
+    and the K/V rows landing in the pages are **bit-for-bit** the oracle's
+    cache rows — across GQA ratios, chunk sizes of 1/2/odd pages, and
+    prompt lengths straddling page boundaries."""
+    rng = np.random.RandomState(seed)
+    b, d_model = 1, 16
+    ps, max_pages = 4, 8                          # max_len 32
+    h = kvh * int(rng.randint(1, 3))
+    hd = d_model // h if d_model % h == 0 else 4
+    C = chunk_pages * ps
+    # Straddle page boundaries: one below, on, or one past a multiple.
+    L = int(np.clip(ps * rng.randint(1, 6) + rng.randint(-1, 2), 2, 30))
+    acfg = layers.AttnConfig(d_model=d_model, n_heads=h, n_kv_heads=kvh,
+                             head_dim=hd)
+    params = layers.attention_init(jax.random.PRNGKey(seed), acfg)
+    x = jnp.asarray(rng.randn(b, L, d_model), jnp.float32)
+
+    contig = {"k": jnp.zeros((b, 32, kvh, hd)),
+              "v": jnp.zeros((b, 32, kvh, hd)),
+              "index": jnp.zeros((b,), jnp.int32)}
+    out_ref, new_ref = layers.attention_apply(params, acfg, x, cache=contig)
+
+    cache = {"kp": jnp.zeros((1 + max_pages, ps, kvh, hd)),
+             "vp": jnp.zeros((1 + max_pages, ps, kvh, hd)),
+             "pages": jnp.asarray(
+                 np.arange(1, max_pages + 1, dtype=np.int32)[None]),
+             "index": jnp.zeros((b,), jnp.int32)}
+    outs = []
+    for s0 in range(0, L, C):
+        n = min(C, L - s0)
+        xi = x[:, s0:s0 + n]
+        if n < C:                      # the engine pads the final chunk
+            xi = jnp.pad(xi, ((0, 0), (0, C - n), (0, 0)))
+        o, cache = layers.attention_apply(params, acfg, xi, cache=cache,
+                                          use_flash=use_flash)
+        # The engine resets the write position to the true length after a
+        # padded chunk so padded rows are never attended.
+        cache = dict(cache, index=jnp.minimum(cache["index"], L))
+        outs.append(o[:, :n])
+    out_chunk = jnp.concatenate(outs, axis=1)
+
+    np.testing.assert_allclose(np.asarray(out_chunk), np.asarray(out_ref),
+                               rtol=3e-5, atol=3e-5)
+    ck, cv = paged.gather_kv(cache["kp"], cache["vp"], cache["pages"])
+    np.testing.assert_array_equal(np.asarray(ck[:, :L]),
+                                  np.asarray(new_ref["k"][:, :L]))
+    np.testing.assert_array_equal(np.asarray(cv[:, :L]),
+                                  np.asarray(new_ref["v"][:, :L]))
+
+
+# ----------------------------------------------------------------------------
+# Engine-level: parity, single executable, interleave, preemption
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_flash", [False, True])
+def test_chunked_engine_matches_reference(model, use_flash):
+    """Multi-chunk prompts (straddling page boundaries) reproduce the
+    contiguous whole-prompt reference token streams exactly."""
+    cfg, params = model
+    if use_flash:
+        cfg = dataclasses.replace(cfg, use_flash=True)
+    rng = np.random.RandomState(0)
+    prompts = {rid: rng.randint(2, cfg.vocab, size=n).astype(np.int32)
+               for rid, n in enumerate((5, 16, 17, 27))}
+    eng = ServingEngine(params, cfg, _chunked_cfg())
+    for rid, pr in prompts.items():
+        eng.submit(Request(rid=rid, prompt=pr, max_new=5))
+    got = eng.run_until_drained()
+    for rid, pr in prompts.items():
+        ref = greedy_generate(params, model[0], jnp.asarray(pr)[None], 5,
+                              max_len=64)
+        assert got[rid] == np.asarray(ref[0]).tolist(), rid
+    assert eng.pool.pages_in_use == 0
+
+
+def test_chunked_engine_compiles_one_prefill_executable(model):
+    """The whole point of fixed-size chunks: ten distinct prompt lengths,
+    one prefill trace — not one per bucket. check.sh's serving subset
+    runs this test as the single-trace gate for the chunked path."""
+    cfg, params = model
+    rng = np.random.RandomState(1)
+    eng = ServingEngine(params, cfg, _chunked_cfg())
+    for rid, n in enumerate((3, 4, 7, 8, 9, 15, 16, 17, 25, 31)):
+        eng.submit(Request(rid=rid,
+                           prompt=rng.randint(2, cfg.vocab, n)
+                           .astype(np.int32), max_new=3))
+    eng.run_until_drained()
+    assert set(eng.prefill_traces) == {eng.chunk}
+    assert eng.prefill_traces[eng.chunk] == 1, eng.prefill_traces
+    assert eng.decode_traces == 1
+
+
+def test_decode_progresses_while_long_prompt_prefills(model):
+    """The head-of-line fix: a 27-token prompt needs 4 chunk ticks; the
+    already-decoding slot must gain one token per tick throughout."""
+    cfg, params = model
+    rng = np.random.RandomState(2)
+    short = rng.randint(2, cfg.vocab, 5).astype(np.int32)
+    long = rng.randint(2, cfg.vocab, 27).astype(np.int32)
+    eng = ServingEngine(params, cfg, _chunked_cfg())
+    eng.submit(Request(rid=0, prompt=short, max_new=20))
+    eng.tick()
+    gen0 = len(eng.slots[0].generated)
+    eng.submit(Request(rid=1, prompt=long, max_new=3))
+    eng.tick()                       # admits rid=1, first chunk
+    assert 1 in eng._prefilling      # still mid-prefill
+    mid_ticks = 0
+    while 1 in eng._prefilling:
+        gen_before = len(eng.slots[0].generated)
+        eng.tick()
+        mid_ticks += 1
+        # Decode made progress in the same tick the chunk streamed.
+        assert len(eng.slots[0].generated) == gen_before + 1
+    assert mid_ticks >= 1
+    got = eng.run_until_drained()
+    ref0 = greedy_generate(params, cfg, jnp.asarray(short)[None], 20,
+                           max_len=64)
+    ref1 = greedy_generate(params, cfg, jnp.asarray(long)[None], 3,
+                           max_len=64)
+    assert got[0] == np.asarray(ref0[0]).tolist()
+    assert got[1] == np.asarray(ref1[0]).tolist()
+    assert gen0 >= 1
+
+
+def test_pool_exhaustion_preempts_youngest_not_raises(model):
+    """Graceful degradation: when decode growth outruns the pool, the
+    youngest slot is evicted back to the queue (pages freed, generated
+    tokens preserved) and both requests still finish with reference
+    streams."""
+    cfg, params = model
+    rng = np.random.RandomState(3)
+    # 5 usable pages; each request grows to 24 rows = 3 pages.
+    scfg = _chunked_cfg(n_pages=6)
+    eng = ServingEngine(params, cfg, scfg)
+    pa = rng.randint(2, cfg.vocab, 15).astype(np.int32)
+    pb = rng.randint(2, cfg.vocab, 15).astype(np.int32)
+    eng.submit(Request(rid=0, prompt=pa, max_new=9))
+    eng.submit(Request(rid=1, prompt=pb, max_new=9))
+    got = eng.run_until_drained()
+    assert eng.preemptions >= 1
+    for rid, pr in ((0, pa), (1, pb)):
+        ref = greedy_generate(params, cfg, jnp.asarray(pr)[None], 9,
+                              max_len=64)
+        assert got[rid] == np.asarray(ref[0]).tolist(), rid
+    assert eng.pool.pages_in_use == 0
+
+
+def test_preempted_request_preserves_generated_tokens(model):
+    """A preempted request re-prefills prompt + generated-so-far and
+    continues the same stream — the preserved tokens are not lost and
+    not regenerated."""
+    cfg, params = model
+    rng = np.random.RandomState(4)
+    scfg = _chunked_cfg(n_pages=6, batch=2)
+    eng = ServingEngine(params, cfg, scfg)
+    pa = rng.randint(2, cfg.vocab, 15).astype(np.int32)
+    eng.submit(Request(rid=0, prompt=pa, max_new=9))
+    # Let rid=0 decode a few tokens before the competitor arrives.
+    for _ in range(3):
+        eng.tick()
+    head = list(eng.slots[0].generated) if eng.slots[0] else []
+    eng.submit(Request(rid=1, prompt=rng.randint(2, cfg.vocab, 15)
+                       .astype(np.int32), max_new=9))
+    got = eng.run_until_drained()
+    ref = greedy_generate(params, cfg, jnp.asarray(pa)[None], 9, max_len=64)
+    assert got[0] == np.asarray(ref[0]).tolist()
+    assert got[0][:len(head)] == head        # prefix survived preemption
+
+
+def test_chunk_page_need_prices_spans():
+    assert paged.chunk_page_need(0, 8, 0, 8, 64) == 1
+    assert paged.chunk_page_need(8, 8, 1, 8, 64) == 1
+    assert paged.chunk_page_need(4, 8, 1, 8, 64) == 1     # straddle
+    assert paged.chunk_page_need(12, 3, 2, 8, 64) == 0    # inside page 2
+    assert paged.chunk_page_need(60, 8, 8, 8, 64) == 0    # clipped at max
+    assert paged.chunk_page_need(56, 16, 7, 8, 64) == 1   # clip to 64
+
+
+def test_chunked_admission_reserves_first_chunk_only(model):
+    cfg, params = model
+    eng = ServingEngine(params, cfg, _chunked_cfg(batch=1))
+    rng = np.random.RandomState(5)
+    eng.submit(Request(rid=0, prompt=rng.randint(2, cfg.vocab, 27)
+                       .astype(np.int32), max_new=2))
+    eng.tick()     # admit + first chunk (8 rows -> 1 page)
+    assert len(eng.pool.slot_pages[0]) == 1
+    eng.tick()     # second chunk
+    assert len(eng.pool.slot_pages[0]) == 2
+    got = eng.run_until_drained()
+    assert len(got[0]) == 2

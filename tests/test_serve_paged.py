@@ -95,7 +95,9 @@ def test_pool_exhaustion_rejects_admission_cleanly(model):
     # 4 pages of 8 rows: one 17-row prompt takes 3; two can't fit at once
     # (each also lazily takes a 4th page as decode crosses a boundary...
     # keep max_new tiny so growth stays inside the prompt's last page).
-    scfg = _paged_cfg(n_pages=5, page_size=8, batch=2)
+    # chunk_size=32 pins whole-prompt chunks so the first-chunk admission
+    # reserve equals the full prompt here, whatever the autotune default.
+    scfg = _paged_cfg(n_pages=5, page_size=8, batch=2, chunk_size=32)
     eng = ServingEngine(params, cfg, scfg)
     p0 = rng.randint(2, cfg.vocab, 17).astype(np.int32)
     p1 = rng.randint(2, cfg.vocab, 17).astype(np.int32)
