@@ -26,6 +26,14 @@ head-of-line stall the chunk scheduler removes) and ``prefill_chunked_32k``
 (modeled — the autotune chunk cost model's chosen chunk vs whole-prompt
 prefill: total-time overhead paid, interleave latency bought back).
 
+Speculative decoding adds two more: ``spec_decode_accept`` (measured — the
+n-gram drafter on a repetitive prompt through the spec engine: accepted
+drafts per verify tick, stream parity with the plain greedy engine, one
+verify executable) and ``spec_decode_32k`` (modeled —
+``autotune.choose_spec_k`` pricing accept-rate against verify-width
+overhead at production shape, including the regime where it returns k=0
+and disables speculation).
+
   PYTHONPATH=src python -m benchmarks.tpu_serving --out BENCH_serving.json
 """
 
@@ -36,12 +44,14 @@ import json
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
 from repro.core import autotune
 from repro.models import transformer as T
-from repro.serve.engine import Request, ServeConfig, ServingEngine
+from repro.serve.engine import (Request, ServeConfig, ServingEngine,
+                                greedy_generate)
 
 ARCH = "qwen3-4b"
 N_REQUESTS = 6
@@ -165,6 +175,83 @@ def _measured_interleave() -> dict:
     }
 
 
+def _measured_spec() -> dict:
+    """spec_decode_accept cell: the n-gram (prompt-lookup) drafter over a
+    period-4 repetitive prompt, spec_k=4. The stream the smoke model
+    greedily settles into is periodic, so once the history repeats the
+    drafter lands whole 4-token drafts per verify tick — the accepted
+    tokens that amortize the per-tick dispatch + weight stream. Parity
+    with the plain greedy engine is asserted, not assumed."""
+    cfg = configs.get_smoke(ARCH)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(3)
+    motif = rng.randint(2, cfg.vocab, 4).astype(np.int32)
+    prompt = np.tile(motif, 6)                   # 24 tokens, period 4
+    max_new, spec_k = 48, 4
+    ref = np.asarray(greedy_generate(
+        params, cfg, jnp.asarray(prompt)[None], max_new,
+        max_len=128)[0]).tolist()
+    eng = ServingEngine(params, cfg,
+                        ServeConfig(max_len=128, batch=2, eos_id=-1,
+                                    paged=True, page_size=8, chunk_size=8,
+                                    spec_k=spec_k, draft="ngram"))
+    # Warm the chunk + verify executables (compile time is not serving
+    # throughput), then reset the accept counters for the timed run.
+    eng.submit(Request(rid=-1, prompt=rng.randint(2, cfg.vocab, 9)
+                       .astype(np.int32), max_new=6))
+    eng.run_until_drained()
+    eng.spec_ticks = eng.spec_accepted = eng.spec_emitted = 0
+
+    t0 = time.perf_counter()
+    eng.submit(Request(rid=0, prompt=prompt, max_new=max_new))
+    finished = eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    ticks = max(1, eng.spec_ticks)
+    return {
+        "spec_k": spec_k,
+        "draft": "ngram",
+        "prompt_len": len(prompt),
+        "decode_tokens": len(finished[0]),
+        "verify_ticks": eng.spec_ticks,
+        "accepted": eng.spec_accepted,
+        "accepted_per_tick": eng.spec_accepted / ticks,
+        "emitted_per_tick": eng.spec_emitted / ticks,
+        "accept_rate": eng.spec_accepted / (spec_k * ticks),
+        "greedy_parity": finished[0] == ref,
+        "wall_s": dt,
+        "tokens_per_s": len(finished[0]) / dt,
+        "verify_executables": eng.verify_traces,
+        "prefill_executables": len(eng.prefill_traces),
+    }
+
+
+def _modeled_spec() -> dict:
+    """spec_decode_32k cell: choose_spec_k at production shape — verify
+    width priced against the fixed per-tick weight stream it amortizes
+    (the paper's latency-hiding arithmetic at serving granularity). Also
+    reports the disable regime: a 1 GB model draft at 5% accept must come
+    back k=0."""
+    cfg = configs.get_config(ARCH)
+    max_len = 32768
+    lengths = np.geomspace(256, max_len, 128).astype(int)
+    param_bytes = T.active_param_count(cfg) * 2.0        # bf16
+    k, terms = autotune.choose_spec_k(
+        lengths, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.dhead, page_size=256, accept_rate=0.7,
+        param_bytes=param_bytes)
+    k_low, _ = autotune.choose_spec_k(
+        lengths, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.dhead, page_size=256, accept_rate=0.05,
+        param_bytes=param_bytes, draft_bytes=1e9)
+    out = dict(terms)
+    out.update({
+        "max_len": max_len,
+        "param_bytes": param_bytes,
+        "k_at_low_accept_model_draft": k_low,
+    })
+    return out
+
+
 def _modeled_chunked() -> dict:
     """prefill_chunked_32k: the autotune chunk cost model at production
     shape — chosen chunk vs whole-prompt (row-cache-equivalent) prefill:
@@ -225,6 +312,8 @@ def run():
     p = _modeled_paged()
     il = _measured_interleave()
     ck = _modeled_chunked()
+    sp = _measured_spec()
+    sk = _modeled_spec()
     return [
         ("measured",
          f"{m['tokens_per_s']:.1f}tok/s;prefill={m['prefill_tokens']};"
@@ -250,6 +339,14 @@ def run():
          f"chunk={ck['chunk']};"
          f"overhead={ck['prefill_overhead_frac']*100:.1f}%;"
          f"latency/{ck['latency_reduction']:.0f}"),
+        ("spec_decode_accept",
+         f"accepted/tick={sp['accepted_per_tick']:.2f};"
+         f"emitted/tick={sp['emitted_per_tick']:.2f};"
+         f"verify_executables={sp['verify_executables']}"),
+        ("spec_decode_32k",
+         f"k={sk['chosen_k']};speedup={sk['speedup']:.2f}x;"
+         f"accept={sk['accept_rate']:.2f};"
+         f"k_low_accept={sk['k_at_low_accept_model_draft']}"),
     ]
 
 
@@ -260,7 +357,9 @@ def main():
     payload = {"measured": _measured(), "modeled_decode_32k": _modeled(),
                "paged_decode_32k": _modeled_paged(),
                "prefill_chunked_interleave": _measured_interleave(),
-               "prefill_chunked_32k": _modeled_chunked()}
+               "prefill_chunked_32k": _modeled_chunked(),
+               "spec_decode_accept": _measured_spec(),
+               "spec_decode_32k": _modeled_spec()}
     print(json.dumps(payload, indent=1))
     assert payload["modeled_decode_32k"]["speedup"] > 1.0
     # Acceptance: paged holds < 50% of the contiguous reservation at
@@ -274,6 +373,17 @@ def main():
         "decode_tokens_during_prefill"] > 0
     assert payload["prefill_chunked_interleave"]["prefill_executables"] == 1
     assert payload["prefill_chunked_32k"]["latency_reduction"] > 1.0
+    # Acceptance: the n-gram drafter lands > 1 accepted token per verify
+    # tick on the repetitive prompt, the stream is the plain greedy
+    # engine's, and exactly one verify executable was traced; the modeled
+    # cell speculates profitably at accept=0.7 and disables (k=0) for the
+    # low-accept model draft.
+    assert payload["spec_decode_accept"]["accepted_per_tick"] > 1.0
+    assert payload["spec_decode_accept"]["greedy_parity"]
+    assert payload["spec_decode_accept"]["verify_executables"] == 1
+    assert payload["spec_decode_32k"]["chosen_k"] >= 1
+    assert payload["spec_decode_32k"]["speedup"] > 1.0
+    assert payload["spec_decode_32k"]["k_at_low_accept_model_draft"] == 0
     if args.out:
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=1)

@@ -32,12 +32,15 @@ if [[ $# -eq 0 ]]; then
     # The serving stack regresses most often; surface its failures before
     # the full sweep. test_serve_chunked also gates the single-trace
     # invariant: ServingEngine.prefill_traces must stay at one executable
-    # for the chunked path no matter the prompt-length mix.
+    # for the chunked path no matter the prompt-length mix, and
+    # test_serve_spec gates the same for the speculative verify
+    # executable (verify_traces == 1).
     python -m pytest -x -q tests/test_serve.py tests/test_serve_paged.py \
-        tests/test_serve_chunked.py \
+        tests/test_serve_chunked.py tests/test_serve_spec.py \
         tests/test_flash_decode.py tests/test_paged_kv.py
     IGNORES=(--ignore=tests/test_serve.py --ignore=tests/test_serve_paged.py
              --ignore=tests/test_serve_chunked.py
+             --ignore=tests/test_serve_spec.py
              --ignore=tests/test_flash_decode.py
              --ignore=tests/test_paged_kv.py)
 fi

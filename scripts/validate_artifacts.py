@@ -93,7 +93,19 @@ def check_bench_serving(path: str) -> None:
                    "prefill_chunked_32k.prefill_s",
                    "prefill_chunked_32k.interleave_latency_s",
                    "prefill_chunked_32k.latency_reduction",
-                   "prefill_chunked_32k.prefill_overhead_frac"):
+                   "prefill_chunked_32k.prefill_overhead_frac",
+                   "spec_decode_accept.spec_k",
+                   "spec_decode_accept.accepted_per_tick",
+                   "spec_decode_accept.emitted_per_tick",
+                   "spec_decode_accept.accept_rate",
+                   "spec_decode_accept.verify_executables",
+                   "spec_decode_accept.verify_ticks",
+                   "spec_decode_32k.chosen_k",
+                   "spec_decode_32k.accept_rate",
+                   "spec_decode_32k.expected_tokens_per_tick",
+                   "spec_decode_32k.speedup",
+                   "spec_decode_32k.verify_overhead_frac",
+                   "spec_decode_32k.k_at_low_accept_model_draft"):
         require(path, obj, dotted)
     if len(FAILURES) == before:
         if not obj["modeled_decode_32k"]["speedup"] > 1.0:
@@ -112,6 +124,21 @@ def check_bench_serving(path: str) -> None:
             fail(path, "no decode tokens landed during long-prompt prefill")
         if not obj["prefill_chunked_32k"]["latency_reduction"] > 1.0:
             fail(path, "chunked prefill latency_reduction <= 1")
+        # Speculative-decoding acceptance: accept rates are rates, the
+        # verify path traced exactly one executable, the measured n-gram
+        # cell beats one accepted draft per tick, and the modeled cell
+        # both speculates profitably and knows when to disable (k=0).
+        for cell in ("spec_decode_accept", "spec_decode_32k"):
+            if not 0.0 <= obj[cell]["accept_rate"] <= 1.0:
+                fail(path, f"{cell}.accept_rate outside [0, 1]")
+        if obj["spec_decode_accept"]["verify_executables"] != 1:
+            fail(path, "spec verify compiled != 1 executable")
+        if not obj["spec_decode_accept"]["accepted_per_tick"] > 1.0:
+            fail(path, "n-gram drafter accepted <= 1 token per verify tick")
+        if not obj["spec_decode_32k"]["speedup"] > 1.0:
+            fail(path, "modeled spec decode speedup <= 1")
+        if obj["spec_decode_32k"]["k_at_low_accept_model_draft"] != 0:
+            fail(path, "choose_spec_k failed to disable at low accept")
 
 
 SPECIFIC = {

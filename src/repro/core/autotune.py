@@ -517,6 +517,138 @@ def choose_prefill_chunk(max_len: int, n_heads: int, n_kv_heads: int,
                       candidates=len(cands))
 
 
+# Host-side cost of one n-gram-lookup drafted token (a numpy scan of the
+# slot's history — no model, no HBM).
+NGRAM_DRAFT_S = 2e-6
+
+
+def expected_spec_tokens(k: int, accept_rate: float) -> float:
+    """E[tokens emitted per verify tick] with per-draft accept probability
+    ``accept_rate``: the accepted prefix length plus the always-emitted
+    bonus/correction token, sum_{i=0..k} a^i. k=0 gives 1 (plain decode)."""
+    return sum(accept_rate ** i for i in range(k + 1))
+
+
+def spec_decode_model(lengths: Iterable[int], n_heads: int,
+                      n_kv_heads: int, head_dim: int, page_size: int,
+                      k: int, accept_rate: float, param_bytes: float,
+                      draft_bytes: float = 0.0,
+                      draft_token_s: float = NGRAM_DRAFT_S,
+                      in_bytes: int = 2,
+                      page_lookup_s: float = PAGE_LOOKUP_S,
+                      plain_tick_s: Optional[float] = None,
+                      tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU) -> dict:
+    """Price one speculative verify tick against ``k + 1`` plain decode
+    ticks — the serving-side instance of the paper's latency-hiding
+    pricing: how much parallel work (k drafted tokens scored in one pass)
+    amortizes the fixed-cost serial step (per-tick dispatch + streaming
+    every weight byte from HBM once, which dominates small-batch decode).
+
+    Per-tick terms, batch-wide:
+
+    * ``weight_stream_s`` — ``param_bytes / hbm_bw``, paid once per tick
+      no matter the verify width: the cost speculation amortizes.
+    * paged attention per slot at query width ``group * (k+1)`` over the
+      slot's live context (+ the drafted rows), with the page-walk term
+      per visited block — the part that *grows* with width.
+    * dense FLOPs for ``slots * (k+1)`` tokens — wasted on rejected rows.
+    * draft cost: ``slots * k`` draft-model weight streams per tick
+      (``draft_bytes``; 0 for the n-gram drafter) — the engine's
+      ``ModelDraft`` rolls out per slot, serially; a batched draft would
+      amortize to ``k`` streams (divide ``draft_bytes`` by the batch) —
+      plus ``slots * k`` host lookups (``draft_token_s``).
+
+    Emitted tokens per tick follow ``expected_spec_tokens(k,
+    accept_rate)``; the headline is ``speedup`` = spec tokens/s over plain
+    tokens/s. ``verify_overhead_frac`` is the widened tick's extra cost —
+    the overhead an accept rate must beat.
+    """
+    from repro.kernels.flash_attention import _largest_divisor
+
+    group = max(1, n_heads // n_kv_heads)
+    lengths = [int(l) for l in lengths]
+    slots = len(lengths)
+    weight_stream_s = param_bytes / tpu.hbm_bandwidth
+    n_params = param_bytes / in_bytes
+
+    def tick_s(width: int) -> float:
+        attn = 0.0
+        for length in lengths:
+            p = AttnProblem(sq=group * width,
+                            skv=max(length + width - 1, 1),
+                            n_heads=n_kv_heads, head_dim=head_dim,
+                            causal=False, in_bytes=in_bytes)
+            c, _ = choose_attn_block(p, tpu, use_cache=False)
+            blk = AttnBlock(c.block_q, _largest_divisor(page_size,
+                                                        c.block_k))
+            t, terms = attn_cost(p, blk, tpu)
+            attn += t + terms["visited_blocks"] * page_lookup_s
+        dense = 2.0 * n_params * slots * width / tpu.peak_bf16_flops
+        return weight_stream_s + attn + dense + CHUNK_DISPATCH_S
+
+    # The width-1 tick is k-independent; choose_spec_k precomputes it
+    # once and threads it through its candidate loop.
+    plain_tick = plain_tick_s if plain_tick_s is not None else tick_s(1)
+    spec_tick = tick_s(k + 1) if k else plain_tick
+    draft_s = slots * k * (draft_bytes / tpu.hbm_bandwidth
+                           + draft_token_s)
+    spec_tick += draft_s
+    e_tokens = expected_spec_tokens(k, accept_rate)
+    tok_plain = slots / plain_tick
+    tok_spec = slots * e_tokens / spec_tick
+    return {
+        "k": k,
+        "accept_rate": accept_rate,
+        "expected_tokens_per_tick": e_tokens,
+        "weight_stream_s": weight_stream_s,
+        "plain_tick_s": plain_tick,
+        "spec_tick_s": spec_tick,
+        "draft_s": draft_s,
+        "verify_overhead_frac": spec_tick / plain_tick - 1.0,
+        "tokens_per_s_plain": tok_plain,
+        "tokens_per_s_spec": tok_spec,
+        "speedup": tok_spec / tok_plain,
+    }
+
+
+def choose_spec_k(lengths: Iterable[int], n_heads: int,
+                  n_kv_heads: int, head_dim: int, page_size: int,
+                  accept_rate: float, param_bytes: float,
+                  draft_bytes: float = 0.0,
+                  draft_token_s: float = NGRAM_DRAFT_S,
+                  ks: Tuple[int, ...] = (1, 2, 3, 4, 6, 8),
+                  in_bytes: int = 2,
+                  tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU
+                  ) -> Tuple[int, dict]:
+    """Pick the verify width the serving engine speculates with.
+
+    Maximizes modeled tokens/sec over candidate ``k``; returns ``k = 0``
+    (speculation disabled — run plain decode ticks) when no candidate
+    beats the plain engine, which happens exactly when the accept rate is
+    too low to pay the verify-width + draft overhead (e.g. a model draft
+    whose serial weight streams cost more than the tokens they land).
+    The returned terms are the best candidate's either way, so the caller
+    can see how close the call was.
+    """
+    lengths = list(lengths)
+    best_k, best_terms, plain_tick_s = 0, None, None
+    for k in ks:
+        terms = spec_decode_model(lengths, n_heads, n_kv_heads,
+                                  head_dim, page_size, k, accept_rate,
+                                  param_bytes, draft_bytes=draft_bytes,
+                                  draft_token_s=draft_token_s,
+                                  in_bytes=in_bytes,
+                                  plain_tick_s=plain_tick_s, tpu=tpu)
+        plain_tick_s = terms["plain_tick_s"]
+        if best_terms is None or \
+                terms["tokens_per_s_spec"] > best_terms["tokens_per_s_spec"]:
+            best_k, best_terms = k, terms
+    if best_terms["speedup"] <= 1.0:
+        best_k = 0
+    return best_k, dict(best_terms, chosen_k=best_k,
+                        candidates=len(list(ks)))
+
+
 # ----------------------------------------------------------------------------
 # Sharding selection for one weight-stationary matmul layer.
 # ----------------------------------------------------------------------------

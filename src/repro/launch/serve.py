@@ -36,7 +36,19 @@ def main(argv=None):
                     help="pool size as a fraction of the contiguous "
                          "batch*max_len reservation (>= 1.0 keeps the "
                          "full, exhaustion-free equivalent)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: drafted tokens per verify "
+                         "tick (paged only; 0 disables — see "
+                         "core.autotune.choose_spec_k for when that wins)")
+    ap.add_argument("--draft", default="ngram",
+                    help="draft source for --spec-k: 'ngram' (prompt "
+                         "lookup, no second model), 'self' (sliding-window "
+                         "self-speculation), or a configs/ arch name")
     args = ap.parse_args(argv)
+
+    if args.spec_k and not args.paged:
+        raise SystemExit("--spec-k needs --paged (verify runs the paged "
+                         "s>1 attention path)")
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
         else configs.get_config(args.arch)
@@ -54,7 +66,9 @@ def main(argv=None):
                                        batch=args.batch, paged=args.paged,
                                        page_size=args.page_size,
                                        n_pages=n_pages,
-                                       chunk_size=args.chunk_size))
+                                       chunk_size=args.chunk_size,
+                                       spec_k=args.spec_k,
+                                       draft=args.draft))
     rng = np.random.RandomState(args.seed)
     t0 = time.time()
     for rid in range(args.requests):
@@ -73,6 +87,12 @@ def main(argv=None):
               f"chunk={engine.chunk}, "
               f"{engine.admission_rejections} admission holds, "
               f"{engine.preemptions} preemptions")
+    if engine.spec_k:
+        ticks = max(1, engine.spec_ticks)
+        print(f"  spec: k={engine.spec_k} draft={args.draft} "
+              f"accepted/tick={engine.spec_accepted / ticks:.2f} "
+              f"emitted/tick={engine.spec_emitted / ticks:.2f} "
+              f"({engine.verify_traces} verify executable)")
     for rid in sorted(finished):
         print(f"  req {rid}: {finished[rid][:10]}...")
     return finished

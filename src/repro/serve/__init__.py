@@ -2,3 +2,5 @@ from repro.serve.engine import (ServeConfig, ServingEngine, decode_step,  # noqa
                                 greedy_generate, make_serve_step, prefill)
 from repro.serve.paged import (PageAllocator, PagePoolExhausted,  # noqa
                                pages_for)
+from repro.serve.spec import (ModelDraft, NgramDraft, ScriptedDraft,  # noqa
+                              longest_accept, resolve_draft)

@@ -41,6 +41,20 @@ KV/SSM cache of the cell's sequence length, caches donated in-place.
     (re-prefilled as prompt context on re-admission). Counted in
     ``engine.preemptions``; only a pool with nothing left to preempt still
     raises ``PagePoolExhausted``.
+  * **Speculative decoding** (``ServeConfig.spec_k``, paged only) — each
+    tick drafts ``k`` tokens per decode-active slot (``serve.spec`` draft
+    sources: n-gram prompt lookup or a small draft model) and scores them
+    together with the pending token in ONE batched verify executable over
+    the paged ``s > 1`` attention path (``layers._paged_apply``,
+    write-then-attend). The longest accepted prefix plus the corrected
+    bonus token is emitted (>= 1 token per slot per tick; zero accepts
+    degrade to plain decode), write positions roll back over rejected
+    rows, and the emitted stream is exactly the plain engine's.
+  * **Per-position sampling keys** — every emitted token is sampled under
+    a key derived from (request id, emitted index), never from the tick
+    count: preempted streams replay bit-identically on re-admission and
+    the speculative verify consumes exactly the keys sequential decode
+    would, so spec == plain holds at temperature > 0 too.
 """
 
 from __future__ import annotations
@@ -54,6 +68,7 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.serve import paged as paged_mod
+from repro.serve import spec as spec_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +87,14 @@ class ServeConfig:
     chunk_size: Optional[int] = None  # prefill chunk rows (paged=True);
     # must be a page_size multiple; None -> the autotune chunk cost
     # model's choice (``core.autotune.choose_prefill_chunk``).
+    spec_k: int = 0              # drafted tokens per verify tick (paged
+    # only); 0 disables speculation — ``core.autotune.choose_spec_k``
+    # prices when that is the right call.
+    draft: Any = None            # spec_k > 0: a serve.spec DraftSource,
+    # or "ngram" (default) / "self" / a configs/ arch name.
+    prefill_chunks_per_tick: Optional[int] = None  # per-tick prefill
+    # chunk budget; None runs one chunk for *every* mid-prefill slot.
+    # With a budget, the shortest-remaining-first order decides who runs.
 
 
 def prefill(params, cfg: T.ModelConfig, tokens, caches,
@@ -201,29 +224,118 @@ class ServingEngine:
         self.queue: List[Request] = []
         self.last_tok = jnp.zeros((serve_cfg.batch,), jnp.int32)
         self.finished: Dict[int, List[int]] = {}
-        self._key = jax.random.PRNGKey(serve_cfg.seed)
+        self._base_key = jax.random.PRNGKey(serve_cfg.seed)
+        self._rid_keys: Dict[int, Any] = {}
+        self._zero_key = jnp.zeros((2,), jnp.uint32)
+        self._zero_ids = jnp.zeros((serve_cfg.batch,), jnp.int32)
         self._prefill_fns: Dict[int, Callable] = {}
         self.prefill_traces: Dict[int, int] = {}
         self.decode_traces = 0
+        self.verify_traces = 0            # spec verify executables traced
         self.admission_rejections = 0     # pool-exhausted admission holds
         self.preemptions = 0              # slots evicted back to the queue
+        self.ticks = 0
+        self.first_token_tick: Dict[int, int] = {}   # rid -> TTFT (ticks)
+        self.spec_ticks = 0        # (slot, tick) verify events
+        self.spec_accepted = 0     # drafted tokens accepted
+        self.spec_emitted = 0      # tokens emitted by verify ticks
         self._prefilling: Dict[int, int] = {}   # slot -> prompt rows written
+        self._prefill_wait: Dict[int, int] = {} # slot -> ticks since served
         self._slot_seq: Dict[int, int] = {}     # slot -> admission sequence
         self._admit_seq = 0
+        self.spec_k = serve_cfg.spec_k
+        if self.spec_k:
+            assert self.spec_k >= 1
+            assert self.pool is not None, \
+                "speculative decoding needs paged=True (verify runs the " \
+                "paged s>1 attention path)"
+            self.draft = spec_mod.resolve_draft(serve_cfg.draft, cfg, params)
+            self._verify_fn = self._make_verify_fn()
+        if serve_cfg.prefill_chunks_per_tick is not None:
+            assert serve_cfg.prefill_chunks_per_tick >= 1, \
+                serve_cfg.prefill_chunks_per_tick
         self._step = self._make_decode_step()
 
     # -- jitted executables ---------------------------------------------------
 
     def _make_decode_step(self) -> Callable:
-        pick = sampler(self.scfg.temperature)
-        cfg = self.cfg
+        temp = self.scfg.temperature
+        pick = spec_mod.per_row_sampler(temp)
+        cfg, base = self.cfg, self._base_key
 
-        def step(params, last_tokens, caches, key):
+        def step(params, last_tokens, caches, rids, ts):
             self.decode_traces += 1          # runs at trace time only
             logits, caches = decode_step(params, cfg, last_tokens, caches)
-            return pick(logits, key), caches
+            # Keys fold inside the executable (no per-tick host fold_ins);
+            # greedy never consumes them, so skip the fold entirely.
+            keys = spec_mod.fold_row_keys(base, rids, ts) if temp else None
+            return pick(logits, keys), caches
 
         return jax.jit(step, donate_argnums=(2,))
+
+    def _make_verify_fn(self) -> Callable:
+        """The ONE jitted draft-verify executable. Width is fixed at
+        ``spec_k + 1`` (the pending token + k drafts), so it traces
+        exactly once — ``verify_traces`` gates it like the prefill
+        executables. One batched forward scores every slot's candidate
+        row through the paged s>1 attention path (write-then-attend in
+        ``layers._paged_apply``: the candidates' K/V rows scatter through
+        the page table, each query attends the slot's live prefix plus
+        its own candidate prefix) and picks a target token per position —
+        position j's key belongs to emitted index ``len(generated) + j``,
+        so sampling matches sequential decode token for token."""
+        temp = self.scfg.temperature
+        pick = spec_mod.per_row_sampler(temp)
+        cfg, base, width = self.cfg, self._base_key, self.spec_k + 1
+
+        def verify(params, tokens, caches, rids, t0s):
+            self.verify_traces += 1          # runs at trace time only
+            logits, caches, _ = T.forward(params, cfg, tokens, caches=caches)
+            keys = spec_mod.fold_span_keys(base, rids, t0s, width) \
+                if temp else None
+            return pick(logits, keys), caches
+
+        return jax.jit(verify, donate_argnums=(2,))
+
+    # -- sampling keys --------------------------------------------------------
+
+    def _slot_key(self, rid: int, t: int):
+        """PRNG key for request ``rid``'s ``t``-th emitted token.
+
+        Keyed by (request, emitted index) — never by engine tick — so a
+        preempted and re-admitted stream replays bit-identically and a
+        speculative verify scoring positions t..t+k consumes exactly the
+        keys the plain engine would, one tick at a time."""
+        base = self._rid_keys.get(rid)
+        if base is None:
+            # & 0xffffffff: negative rids (warm-up requests) fold as their
+            # uint32 bit pattern — the same coercion the traced int32 path
+            # (spec.fold_row_keys) applies, so host and device keys agree.
+            base = self._rid_keys[rid] = jax.random.fold_in(
+                self._base_key, rid & 0xffffffff)
+        return jax.random.fold_in(base, t)
+
+    def _emit_key(self, req: Request):
+        """Key for the next token ``req`` will emit (greedy: unused)."""
+        if self.scfg.temperature == 0.0:
+            return self._zero_key
+        return self._slot_key(req.rid, len(req.generated))
+
+    def _rid_ts(self, active):
+        """(batch,) request ids + (batch,) next emitted indices — the two
+        int vectors the jitted decode/verify steps fold into sampling
+        keys on-device (``spec.fold_row_keys``/``fold_span_keys``). Host
+        cost is two tiny int arrays per tick; greedy reuses zeros (the
+        executables never consume them)."""
+        if self.scfg.temperature == 0.0:
+            return self._zero_ids, self._zero_ids
+        rids = np.zeros((self.scfg.batch,), np.int32)
+        ts = np.zeros((self.scfg.batch,), np.int32)
+        for i in active:
+            req = self.slots[i]
+            rids[i] = req.rid
+            ts[i] = len(req.generated)
+        return jnp.asarray(rids), jnp.asarray(ts)
 
     def bucket_for(self, prompt_len: int) -> int:
         if not self._bucketed:
@@ -330,11 +442,14 @@ class ServingEngine:
 
         The slot's cache length, host-side (no device sync), is the prompt
         plus every decoded token except the freshly sampled one — which
-        this tick writes at position ``length``. Writes at/past ``max_len``
-        spill to the null page and need no backing. Both the admission
-        headroom check and the lazy allocator below use this one number,
-        so they can never disagree."""
-        length = len(slot.prompt) + len(slot.generated) - 1
+        this tick writes at position ``length``. A speculative tick writes
+        ``spec_k`` drafted rows after it (all backed *optimistically*: an
+        accepted row must land in a real page; a rejected row in an owned
+        page is dead weight the next write overwrites). Writes at/past
+        ``max_len`` spill to the null page and need no backing. Both the
+        admission headroom check and the lazy allocator below use this one
+        number, so they can never disagree."""
+        length = len(slot.prompt) + len(slot.generated) - 1 + self.spec_k
         max_pages = self.scfg.max_len // self.scfg.page_size
         return min(length // self.scfg.page_size + 1, max_pages)
 
@@ -413,14 +528,30 @@ class ServingEngine:
         admission-headroom and chunk-accounting paths only need lengths."""
         return len(req.prompt) + len(req.generated)
 
+    def _draft_history(self, req: Request) -> np.ndarray:
+        """The history the draft source sees each tick. Drafters that
+        declare a ``window`` (n-gram lookup, sliding-window model draft)
+        get only the trailing window — O(window) host work per tick, the
+        bound that lets ``autotune.NGRAM_DRAFT_S`` price a draft token as
+        a context-length-independent constant. Windowless drafters (the
+        scripted test oracle locates itself by absolute position) get the
+        full history."""
+        window = getattr(self.draft, "window", None)
+        if window is None:
+            return self._effective_prompt(req)
+        gen = req.generated
+        if len(gen) >= window:
+            return np.asarray(gen[-window:], np.int32)
+        head = req.prompt[max(0, len(req.prompt) - (window - len(gen))):]
+        if not gen:
+            return np.asarray(head, np.int32)
+        return np.concatenate([np.asarray(head, np.int32),
+                               np.asarray(gen, np.int32)])
+
     def context_lengths(self) -> np.ndarray:
         """Per-slot live KV length (prompt + generated so far), shape
         (batch,) — the vector the flash-decode kernel scalar-prefetches."""
         return np.asarray(T.cache_lengths(self.caches))
-
-    def _next_key(self):
-        self._key, sub = jax.random.split(self._key)
-        return sub
 
     def _record(self, i: int, req: Request, tok: int) -> bool:
         """Append ``tok``; finish + free the slot on EOS/max_new.
@@ -430,6 +561,8 @@ class ServingEngine:
         (the invariant: free slots always read 0).
         """
         req.generated.append(tok)
+        if len(req.generated) == 1 and req.rid not in self.first_token_tick:
+            self.first_token_tick[req.rid] = self.ticks
         if tok == self.scfg.eos_id or len(req.generated) >= req.max_new:
             req.done = True
             self.finished[req.rid] = req.generated
@@ -445,6 +578,7 @@ class ServingEngine:
         pool may immediately re-assign."""
         self.slots[i] = None
         self._prefilling.pop(i, None)
+        self._prefill_wait.pop(i, None)
         self._slot_seq.pop(i, None)
         if self.pool is not None:
             self.pool.free_slot(i)
@@ -499,11 +633,12 @@ class ServingEngine:
                     assert plen <= self.scfg.max_len, \
                         (plen, self.scfg.max_len)
                     # A request over the pool's *capacity* (whole prompt +
-                    # its first decode write) can never finish even with
-                    # every other slot preempted, so fail loudly instead
-                    # of holding it forever.
+                    # its first decode write, speculative width included)
+                    # can never finish even with every other slot
+                    # preempted, so fail loudly instead of holding it
+                    # forever.
                     with_decode = paged_mod.pages_for(
-                        min(plen + 1, self.scfg.max_len), ps)
+                        min(plen + 1 + self.spec_k, self.scfg.max_len), ps)
                     if with_decode > self.pool.n_pages - 1:
                         raise paged_mod.PagePoolExhausted(
                             f"request {req.rid}: needs {with_decode} pages "
@@ -532,7 +667,7 @@ class ServingEngine:
                 tok, self.caches = self._prefill_fn(bucket)(
                     self.params, jnp.asarray(padded),
                     jnp.int32(len(prompt)), jnp.int32(i), self.caches,
-                    self._next_key())
+                    self._emit_key(req))
                 self.slots[i] = req
                 self._slot_seq[i] = self._admit_seq
                 self._admit_seq += 1
@@ -540,16 +675,49 @@ class ServingEngine:
                 if not self._record(i, req, tok):
                     self.last_tok = self.last_tok.at[i].set(tok)
 
+    def _prefill_order(self) -> List[int]:
+        """Mid-prefill slots in shortest-remaining-first order with aging
+        (admission sequence breaks ties). Finishing the nearest-done
+        prompt first is classic SRPT: it minimizes mean time-to-first-
+        token under mixed prompt lengths. Pure SRPT starves: under a
+        ``prefill_chunks_per_tick`` budget a long prompt would wait out
+        every shorter arrival forever, so each tick a slot spends waiting
+        ages it by one chunk of effective remaining work — a prompt with
+        R chunks left runs after at most ~R ticks of being outranked.
+        The order decides who runs at all under a budget, and who gets
+        pages first when the pool is short; with neither constraint every
+        slot still advances one chunk per tick, so throughput is
+        unchanged."""
+        def key(i):
+            remaining = -(-(self._effective_len(self.slots[i])
+                            - self._prefilling[i]) // self.chunk)
+            return (remaining - self._prefill_wait.get(i, 0),
+                    self._slot_seq[i])
+
+        return sorted(self._prefilling, key=key)
+
     def _prefill_tick(self) -> None:
-        """Advance every mid-prefill slot by one chunk (the interleave
+        """Advance mid-prefill slots by one chunk each (the interleave
         unit: between chunks the decode step below keeps every active
-        stream moving). Each chunk's pages are pre-allocated right here,
-        immediately before the chunk that writes them; a short pool
-        preempts younger slots, or — with nothing to preempt — stalls
-        this slot's prefill for the tick (decode ticks still run and
-        eventually return pages)."""
+        stream moving), shortest-remaining-first, up to the per-tick
+        chunk budget (``prefill_chunks_per_tick``; None -> every slot).
+        Each chunk's pages are pre-allocated right here, immediately
+        before the chunk that writes them; a short pool preempts younger
+        slots, or — with nothing to preempt — stalls this slot's prefill
+        for the tick (decode ticks still run and eventually return
+        pages)."""
         ps, max_len = self.scfg.page_size, self.scfg.max_len
-        for i in sorted(self._prefilling):
+        budget = self.scfg.prefill_chunks_per_tick
+        served = 0
+        for i in self._prefill_order():
+            if budget is not None and served >= budget:
+                # Outranked this tick: age so a long prompt can't be
+                # starved by a stream of shorter arrivals. Only slots a
+                # *served* chunk outranked age — a stalled or preempted
+                # top slot doesn't consume budget.
+                if i in self._prefilling:
+                    self._prefill_wait[i] = self._prefill_wait.get(i, 0) + 1
+                continue
             if i not in self._prefilling:      # preempted by an earlier
                 continue                       # slot's chunk this tick
             req = self.slots[i]
@@ -564,6 +732,8 @@ class ServingEngine:
                 if not self._preempt_for(need, protect={i}):
                     continue                   # stalled, retry next tick
                 self._append_pages(i, self.pool.alloc(i, need))
+            served += 1
+            self._prefill_wait.pop(i, None)    # served: aging resets
             chunk_toks = np.zeros((1, self.chunk), np.int32)
             chunk_toks[0, :n] = prompt[cursor:cursor + n]
             end = cursor + n
@@ -574,7 +744,7 @@ class ServingEngine:
             tok, self.caches = self._chunk_fn(
                 self.params, jnp.asarray(chunk_toks), jnp.int32(cursor),
                 jnp.int32(end), jnp.int32(last_in), jnp.int32(i),
-                self.caches, self._next_key())
+                self.caches, self._emit_key(req))
             if end < true_len:
                 self._prefilling[i] = end
                 continue
@@ -584,8 +754,10 @@ class ServingEngine:
                 self.last_tok = self.last_tok.at[i].set(tok)
 
     def tick(self) -> int:
-        """Admit, advance prefill chunks, one decode step for all
+        """Admit, advance prefill chunks, one decode step — or one
+        speculative draft/verify step (``spec_k > 0``) — for all
         decode-active slots; returns #slots making progress."""
+        self.ticks += 1
         self._admit()
         self._prefill_tick()
         self._ensure_decode_pages()
@@ -593,8 +765,19 @@ class ServingEngine:
                   if s is not None and i not in self._prefilling]
         if not active:
             return len(self._prefilling)
+        n = len(active) + len(self._prefilling)
+        if self.spec_k:
+            self._spec_tick(active)
+        else:
+            self._decode_tick(active)
+        self._reset_prefill_positions()
+        return n
+
+    def _decode_tick(self, active: List[int]) -> None:
+        """One plain batched decode step: one token per active slot."""
+        rids, ts = self._rid_ts(active)
         nxt, self.caches = self._step(self.params, self.last_tok,
-                                      self.caches, self._next_key())
+                                      self.caches, rids, ts)
         nxt_host = np.asarray(nxt).copy()
         active_set = set(active)
         for i in range(self.scfg.batch):
@@ -605,17 +788,95 @@ class ServingEngine:
             # output can't alias eos_id (and decodes stay deterministic).
             nxt_host[i] = 0
         self.last_tok = jnp.asarray(nxt_host, jnp.int32)
-        if self._prefilling:
-            # The batched decode step advanced every slot's write position
-            # and wrote one garbage K/V row for mid-prefill slots (at the
-            # cursor — the next chunk overwrites it, or in the null page).
-            # Reset their positions so the next chunk resumes correctly.
-            items = sorted(self._prefilling.items())
-            cols = jnp.asarray([i for i, _ in items], jnp.int32)
-            vals = jnp.asarray([v for _, v in items], jnp.int32)
-            self.caches = [dict(c, index=c["index"].at[:, cols].set(vals))
+
+    def _spec_tick(self, active: List[int]) -> None:
+        """One draft/verify step (``serve.spec``): up to ``spec_k``
+        drafted tokens per active slot are scored together with the
+        pending token in the single verify executable, and the longest
+        accepted prefix plus the corrected bonus token is recorded — at
+        least one token per slot per tick, so a zero-accept tick is
+        exactly a plain decode tick.
+
+        Rollback invariant: the verify advanced *every* slot's write
+        position by ``spec_k + 1`` and scattered that many K/V rows
+        through each slot's table. The rows for [pending, accepted
+        drafts] are precisely the rows a plain engine would have written;
+        the host rolls each slot's write position back to its true live
+        length, leaving rejected rows as dead weight in owned pages
+        (overwritten by the next tick's write at the same positions) or
+        in the null page (positions past the table's reach). Slot state
+        after the tick is therefore bit-identical to a plain engine that
+        emitted the same tokens."""
+        k, width = self.spec_k, self.spec_k + 1
+        tokens = np.zeros((self.scfg.batch, width), np.int32)
+        tokens[:, 0] = np.asarray(self.last_tok)
+        base_len: Dict[int, int] = {}
+        n_prop: Dict[int, int] = {}
+        for i in active:
+            req = self.slots[i]
+            # Write position before the tick (host-side, no device sync).
+            base_len[i] = self._effective_len(req) - 1
+            prop = np.asarray(
+                self.draft.propose(self._draft_history(req), k),
+                np.int32).ravel()[:k]
+            n_prop[i] = len(prop)
+            tokens[i, 1:1 + len(prop)] = np.clip(prop, 0,
+                                                 self.cfg.vocab - 1)
+        rids, t0s = self._rid_ts(active)
+        picks, self.caches = self._verify_fn(
+            self.params, jnp.asarray(tokens), self.caches, rids, t0s)
+        picks = np.asarray(picks)
+        last = np.zeros((self.scfg.batch,), np.int32)
+        cols: List[int] = []
+        vals: List[int] = []
+        for i in active:
+            req = self.slots[i]
+            # Score only what the drafter actually proposed: a zero-padded
+            # undrafted position that happened to match the target would
+            # otherwise inflate the accept stats (the gated accept-rate
+            # cell and any measured-accept feedback into choose_spec_k).
+            accepted, emitted = spec_mod.longest_accept(
+                tokens[i, 1:1 + n_prop[i]], picks[i, :n_prop[i] + 1])
+            self.spec_ticks += 1
+            self.spec_accepted += accepted
+            done, n_rec = False, 0
+            for tok in emitted:
+                n_rec += 1
+                self.spec_emitted += 1
+                if self._record(i, req, int(tok)):
+                    done = True          # EOS or max_new: rest discarded
+                    break
+            if not done:
+                # Live rows gained: the pending token plus n_rec - 1
+                # accepted drafts (the last emitted token is the unwritten
+                # bonus/divergence token, fed back as last_tok).
+                cols.append(i)
+                vals.append(base_len[i] + n_rec)
+                last[i] = emitted[n_rec - 1]
+        if cols:
+            cj = jnp.asarray(cols, jnp.int32)
+            vj = jnp.asarray(vals, jnp.int32)
+            self.caches = [dict(c, index=c["index"].at[:, cj].set(vj))
                            for c in self.caches]
-        return len(active) + len(self._prefilling)
+        # Freed slots were zeroed by free_slot (after the verify, so its
+        # donation-rebound caches are what got zeroed); mid-prefill slots
+        # reset in _reset_prefill_positions; empty slots drift through
+        # the null page exactly like a plain tick, just k+1 wide.
+        self.last_tok = jnp.asarray(last, jnp.int32)
+
+    def _reset_prefill_positions(self) -> None:
+        """The batched decode/verify step advanced every slot's write
+        position and wrote garbage K/V rows for mid-prefill slots (from
+        the cursor — the next chunks overwrite them, or the null page
+        absorbed them). Reset their positions so the next chunk resumes
+        correctly."""
+        if not self._prefilling:
+            return
+        items = sorted(self._prefilling.items())
+        cols = jnp.asarray([i for i, _ in items], jnp.int32)
+        vals = jnp.asarray([v for _, v in items], jnp.int32)
+        self.caches = [dict(c, index=c["index"].at[:, cols].set(vals))
+                       for c in self.caches]
 
     def run_until_drained(self, max_ticks: int = 10000) -> Dict[int, List[int]]:
         for _ in range(max_ticks):

@@ -1,0 +1,279 @@
+"""Speculative decoding: draft sources + exact accept/reject bookkeeping.
+
+The paper's recurring move is pricing a latency-hiding mechanism by how
+much parallel work it stacks behind one fixed-cost serial step (dual-issue
+behind a shared scheduler slot, cache-line geometry behind one tag lookup,
+TLB reach behind one translation). Small-batch decode has exactly that
+shape: every engine tick pays a fixed dispatch + full weight stream from
+HBM to emit *one* token per slot. Speculative decoding widens the tick —
+``k`` cheap drafted tokens are scored together with the pending token in a
+single verify pass, so the fixed per-tick cost amortizes over every
+accepted token (``core.autotune.spec_decode_model`` prices the trade; the
+engine's ``_spec_tick`` executes it).
+
+Pieces:
+
+* **Draft sources** — anything with ``propose(history, k) -> <=k token
+  ids``. ``NgramDraft`` needs no second model: it looks the trailing
+  n-gram up in the slot's own history (prompt-lookup decoding) and
+  proposes whatever followed it last time — free on repetitive spans.
+  ``ModelDraft`` runs a small draft model greedily over a fixed sliding
+  window (one jitted rollout executable, any ``configs/`` arch with a
+  compatible vocab). ``ScriptedDraft`` forces an accept/reject pattern
+  against a known reference stream — the oracle tests' instrument.
+* **Acceptance** — ``longest_accept``: exact token-match acceptance.
+  The verify pass picks a target token at every position; drafts are
+  accepted up to the first mismatch and the target at that position is
+  the corrected *bonus* token, so every verify tick emits at least one
+  token (a zero-accept tick degrades to plain decode) and the emitted
+  stream is the one the non-speculative engine would have produced —
+  bit-identical under greedy, and under temperature sampling too because
+  the engine keys every emitted position by (request, position), not by
+  tick (``per_row_sampler`` consumes one key per position).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+
+def per_row_sampler(temperature: float) -> Callable:
+    """logits (..., vocab) + keys (..., 2) -> ids; one PRNG key per row.
+
+    The engine samples every emitted position under its own key (derived
+    from the request id and the position index), so a speculative verify
+    scoring positions t..t+k consumes exactly the keys the plain engine
+    would have, one tick at a time — the parity that makes spec-vs-plain
+    streams identical even at temperature > 0. Greedy ignores the keys.
+    """
+    if temperature == 0.0:
+        return lambda logits, keys: jnp.argmax(logits, -1).astype(jnp.int32)
+
+    def sample(logits, keys):
+        lead = logits.shape[:-1]
+        flat_l = logits.reshape((-1, logits.shape[-1]))
+        flat_k = keys.reshape((-1, 2))
+        toks = jax.vmap(lambda l, k: jax.random.categorical(
+            k, l.astype(jnp.float32) / temperature))(flat_l, flat_k)
+        return toks.reshape(lead).astype(jnp.int32)
+
+    return sample
+
+
+def fold_row_keys(base_key, rids, ts):
+    """Per-row sampling keys derived *inside* a jitted step: (b,) request
+    ids + (b,) emitted indices -> (b, 2) keys, fold_in(fold_in(base, rid),
+    t) per row. Keeps the per-(request, position) key discipline without
+    per-tick host-side fold_in dispatches on the hot decode path (the
+    engine's no-per-tick-sync invariant)."""
+    return jax.vmap(lambda r, t: jax.random.fold_in(
+        jax.random.fold_in(base_key, r), t))(rids, ts)
+
+
+def fold_span_keys(base_key, rids, t0s, width: int):
+    """Verify-tick keys: (b,) request ids + (b,) first emitted indices ->
+    (b, width, 2), position j of row i keyed by (rids[i], t0s[i] + j)."""
+    def row(r, t0):
+        kb = jax.random.fold_in(base_key, r)
+        return jnp.stack([jax.random.fold_in(kb, t0 + j)
+                          for j in range(width)])
+
+    return jax.vmap(row)(rids, t0s)
+
+
+def longest_accept(drafts: Sequence[int],
+                   targets: Sequence[int]) -> Tuple[int, List[int]]:
+    """Exact-match acceptance: longest accepted prefix + corrected bonus.
+
+    ``drafts`` are the k proposed tokens; ``targets`` the k+1 verify picks
+    (``targets[j]`` is the model's choice *after* context + drafts[:j]).
+    Draft j is accepted iff it equals ``targets[j]``; the emitted tokens
+    are the accepted prefix plus ``targets[a]`` — the token the plain
+    engine would have produced at the first divergence (or the free bonus
+    token when everything was accepted). Always emits >= 1 token.
+    """
+    a = 0
+    while a < len(drafts) and int(drafts[a]) == int(targets[a]):
+        a += 1
+    return a, [int(t) for t in drafts[:a]] + [int(targets[a])]
+
+
+# ----------------------------------------------------------------------------
+# Draft sources
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class NgramDraft:
+    """Prompt-lookup drafting: no second model, no extra HBM.
+
+    Proposes the k tokens that followed the most recent *previous*
+    occurrence of the history's trailing ``n``-gram, backing off to
+    shorter n-grams down to ``min_n``; proposes nothing when the history
+    never repeats (the verify tick then degrades to plain decode width).
+    Accept rate is whatever the workload's self-similarity buys — high on
+    code, quotes, and structured spans, ~zero on fresh prose.
+
+    The lookup scans only the trailing ``window`` tokens: drafting sits
+    on the host between device steps, so its cost must stay constant in
+    context length — that bound is exactly what lets
+    ``core.autotune.NGRAM_DRAFT_S`` price a draft token as a
+    length-independent constant in ``choose_spec_k``.
+    """
+
+    n: int = 3
+    min_n: int = 1
+    window: int = 1024
+
+    def propose(self, history: np.ndarray, k: int) -> np.ndarray:
+        h = np.asarray(history, np.int32).ravel()[-self.window:]
+        length = len(h)
+        for n in range(min(self.n, length - 1), self.min_n - 1, -1):
+            pat = h[length - n:]
+            windows = np.lib.stride_tricks.sliding_window_view(h, n)
+            hits = np.nonzero((windows == pat).all(axis=1))[0]
+            hits = hits[hits < length - n]      # exclude the query itself
+            if not hits.size:
+                continue
+            # Prefer the most recent occurrence with k whole continuation
+            # tokens; a tail-touching match means the history ends in a
+            # short cycle, so extend the proposal cyclically — a constant
+            # or period-p tail then drafts k full tokens, not the one or
+            # two left before the end.
+            full = hits[hits + n + k <= length]
+            start = int(full[-1] if full.size else hits[-1]) + n
+            cont = h[start:start + k]
+            if len(cont) < k:
+                # Tail-touching match: every hit ends before the final
+                # n-gram, so at least one continuation token exists.
+                cycle = h[start:]
+                cont = np.tile(cycle, -(-k // len(cycle)))[:k]
+            return cont
+        return np.zeros((0,), np.int32)
+
+
+class ModelDraft:
+    """Draft-model rollout: greedy k-token continuation from a (small)
+    model over a fixed sliding window of the history.
+
+    The window keeps every shape static — one jitted prefill-and-rollout
+    executable per k, reused for every slot and every tick (its traces are
+    the draft's own, not counted against the engine's verify gate).
+    Positions are window-relative: for histories longer than ``window``
+    the draft sees a shifted RoPE frame — fine for a *proposer* (the
+    verify pass is what guarantees exactness), and what keeps the draft's
+    cost O(window), not O(context).
+    """
+
+    def __init__(self, params, cfg: T.ModelConfig, window: int = 32):
+        assert window >= 1
+        self.params = params
+        self.cfg = cfg
+        self.window = window
+        self._fns: Dict[int, Callable] = {}
+
+    def _fn(self, k: int) -> Callable:
+        fn = self._fns.get(k)
+        if fn is not None:
+            return fn
+        cfg, window = self.cfg, self.window
+
+        def rollout(params, tokens, true_len):
+            # tokens: (1, window) right-padded history tail.
+            caches = T.init_caches(cfg, 1, window + k, per_slot_index=True)
+            logits, caches, _ = T.forward(params, cfg, tokens, caches=caches)
+            last = jax.lax.dynamic_index_in_dim(logits[0], true_len - 1,
+                                                axis=0, keepdims=False)
+            # Padded rows sit at/past true_len; resetting the write
+            # position masks them out of the rollout steps.
+            caches = T.set_cache_lengths(caches, true_len)
+            tok = jnp.argmax(last, -1).astype(jnp.int32)
+            out = [tok]
+            for _ in range(k - 1):
+                logits, caches, _ = T.forward(params, cfg, tok[None, None],
+                                              caches=caches)
+                tok = jnp.argmax(logits[0, -1], -1).astype(jnp.int32)
+                out.append(tok)
+            return jnp.stack(out)
+
+        fn = self._fns[k] = jax.jit(rollout)
+        return fn
+
+    def propose(self, history: np.ndarray, k: int) -> np.ndarray:
+        h = np.asarray(history, np.int32).ravel()
+        n = min(len(h), self.window)
+        if n == 0 or k == 0:
+            return np.zeros((0,), np.int32)
+        tokens = np.zeros((1, self.window), np.int32)
+        tokens[0, :n] = h[len(h) - n:]
+        return np.asarray(self._fn(k)(self.params, jnp.asarray(tokens),
+                                      jnp.int32(n)), np.int32)
+
+
+class ScriptedDraft:
+    """Forced accept/reject oracle (tests): proposes the *true* reference
+    token at emitted position t when ``pattern[t % len]`` is truthy, a
+    corrupted (guaranteed-rejected) token otherwise.
+
+    ``stream`` is the reference generated stream for the single request
+    this draft serves; position = len(history) - prompt_len. An all-zero
+    pattern is the adversarial always-wrong draft (every verify tick then
+    emits exactly one token — the plain-decode degradation the tests pin).
+    """
+
+    def __init__(self, prompt_len: int, stream: Sequence[int],
+                 pattern: Sequence[int], vocab: int):
+        assert len(pattern) >= 1
+        self.prompt_len = prompt_len
+        self.stream = np.asarray(stream, np.int32)
+        self.pattern = [bool(p) for p in pattern]
+        self.vocab = vocab
+
+    def propose(self, history: np.ndarray, k: int) -> np.ndarray:
+        pos = len(np.asarray(history).ravel()) - self.prompt_len
+        out = []
+        for j in range(k):
+            t = pos + j
+            if t >= len(self.stream):
+                break
+            tok = int(self.stream[t])
+            if not self.pattern[t % len(self.pattern)]:
+                tok = (tok + 1) % self.vocab
+            out.append(tok)
+        return np.asarray(out, np.int32)
+
+
+def resolve_draft(draft: Any, cfg: T.ModelConfig, params) -> Any:
+    """ServeConfig.draft -> a DraftSource.
+
+    Strings name built-ins: ``"ngram"`` (default), ``"self"``
+    (self-speculation with the target model over a sliding window), or a
+    ``configs/`` arch name whose smoke config becomes a freshly-initialized
+    draft model (a demo stand-in for a trained draft checkpoint). Anything
+    else must already quack like a DraftSource.
+    """
+    if draft is None:
+        draft = "ngram"
+    if not isinstance(draft, str):
+        assert callable(getattr(draft, "propose", None)), draft
+        return draft
+    if draft == "ngram":
+        return NgramDraft()
+    if draft == "self":
+        return ModelDraft(params, cfg)
+    from repro import configs
+    # Smoke drafts pair with smoke targets; a full-size target needs the
+    # arch's full config (smoke vocabs are tiny and could never cover it).
+    dcfg = configs.get_smoke(draft)
+    if dcfg.vocab < cfg.vocab:
+        dcfg = configs.get_config(draft)
+    assert dcfg.vocab >= cfg.vocab, \
+        ("draft vocab must cover the target's", dcfg.vocab, cfg.vocab)
+    dparams = T.init_params(jax.random.PRNGKey(0), dcfg)
+    return ModelDraft(dparams, dcfg)

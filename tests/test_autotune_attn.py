@@ -176,3 +176,73 @@ def test_choose_prefill_chunk_is_page_aligned_and_bounded():
     # A chunk far below max_len must win once latency is priced at all:
     # whole-prompt prefill stalls every decode slot for the full prompt.
     assert chunk < 32768
+
+
+# ----------------------------------------------------------------------------
+# Speculative-decode cost model
+# ----------------------------------------------------------------------------
+
+SPEC_DIMS = dict(n_heads=32, n_kv_heads=8, head_dim=128, page_size=256,
+                 param_bytes=8e9)
+SPEC_LENS = [512, 2048, 8192, 32768]
+
+
+def test_expected_spec_tokens_bounds():
+    """E[tokens/tick] = sum a^i: 1 at k=0 or a=0, k+1 at a=1, monotone in
+    both arguments."""
+    assert autotune.expected_spec_tokens(0, 0.9) == 1.0
+    assert autotune.expected_spec_tokens(4, 0.0) == 1.0
+    assert autotune.expected_spec_tokens(4, 1.0) == pytest.approx(5.0)
+    e2 = autotune.expected_spec_tokens(2, 0.6)
+    e4 = autotune.expected_spec_tokens(4, 0.6)
+    assert 1.0 < e2 < e4 < 5.0
+    assert autotune.expected_spec_tokens(2, 0.8) > e2
+
+
+def test_spec_decode_model_terms():
+    """The verify-width trade: a wider tick costs more than a plain tick
+    (the overhead an accept rate must beat) but amortizes the fixed
+    weight stream — at a healthy accept rate the tokens/sec win."""
+    out = autotune.spec_decode_model(SPEC_LENS, k=4,
+                                     accept_rate=0.8, **SPEC_DIMS)
+    assert out["spec_tick_s"] > out["plain_tick_s"]
+    assert out["verify_overhead_frac"] > 0
+    assert out["weight_stream_s"] > 0
+    assert out["expected_tokens_per_tick"] == pytest.approx(
+        autotune.expected_spec_tokens(4, 0.8))
+    assert out["speedup"] == pytest.approx(
+        out["tokens_per_s_spec"] / out["tokens_per_s_plain"])
+    assert out["speedup"] > 1.0
+    # Zero accepts: pure overhead, strictly worse than plain decode.
+    zero = autotune.spec_decode_model(SPEC_LENS, k=4,
+                                      accept_rate=0.0, **SPEC_DIMS)
+    assert zero["speedup"] < 1.0
+
+
+def test_spec_speedup_monotone_in_accept_rate():
+    prev = 0.0
+    for a in (0.1, 0.4, 0.7, 0.95):
+        out = autotune.spec_decode_model(SPEC_LENS, k=4,
+                                         accept_rate=a, **SPEC_DIMS)
+        assert out["speedup"] > prev
+        prev = out["speedup"]
+
+
+def test_choose_spec_k_disables_when_speculation_loses():
+    """k=0 is a real answer: a low accept rate plus an expensive serial
+    model draft must disable speculation, while the free n-gram drafter
+    at a healthy accept rate picks k >= 1 with a real speedup."""
+    k, terms = autotune.choose_spec_k(SPEC_LENS, accept_rate=0.05,
+                                      draft_bytes=1e9, **SPEC_DIMS)
+    assert k == 0 and terms["speedup"] <= 1.0
+    k2, terms2 = autotune.choose_spec_k(SPEC_LENS, accept_rate=0.7,
+                                        **SPEC_DIMS)
+    assert k2 >= 1 and terms2["speedup"] > 1.0 and terms2["chosen_k"] == k2
+
+
+def test_choose_spec_k_grows_with_accept_rate():
+    klo, _ = autotune.choose_spec_k(SPEC_LENS, accept_rate=0.3,
+                                    **SPEC_DIMS)
+    khi, _ = autotune.choose_spec_k(SPEC_LENS, accept_rate=0.95,
+                                    **SPEC_DIMS)
+    assert khi >= klo

@@ -208,6 +208,54 @@ def test_paged_write_past_max_len_lands_in_null_page(use_flash):
     assert not np.array_equal(np.asarray(new["kp"][0]), np.asarray(kp[0]))
 
 
+@pytest.mark.parametrize("use_flash", [False, True])
+def test_paged_multirow_write_straddles_table_reach(use_flash):
+    """s > 1 at the exact page-table-reach boundary (the speculative
+    verify's write shape): a 3-row write starting 2 rows before max_len
+    must land its in-reach rows in the slot's last live page and spill
+    only the out-of-reach row to the null page — and the attention output
+    must match the contiguous cache, which simply drops the out-of-bounds
+    scatter."""
+    rng = np.random.RandomState(0)
+    b, ps, max_pages, d_model, h = 1, 4, 2, 8, 2
+    max_len = ps * max_pages                      # 8
+    hd = d_model // h
+    acfg = layers.AttnConfig(d_model=d_model, n_heads=h, n_kv_heads=h,
+                             head_dim=hd)
+    params = layers.attention_init(jax.random.PRNGKey(0), acfg)
+    s, idx = 3, max_len - 2                       # rows 6, 7 live; 8 spills
+    x = jnp.asarray(rng.randn(b, s, d_model), jnp.float32)
+    k0 = rng.randn(b, max_len, h, hd).astype(np.float32)
+    v0 = rng.randn(b, max_len, h, hd).astype(np.float32)
+    k0[:, idx:], v0[:, idx:] = 0, 0               # only idx rows live
+    contig = {"k": jnp.asarray(k0), "v": jnp.asarray(v0),
+              "index": jnp.asarray([idx], jnp.int32)}
+    kp = np.zeros((1 + max_pages, ps, h, hd), np.float32)
+    vp = np.zeros_like(kp)
+    kp[1:] = k0[0].reshape(max_pages, ps, h, hd)
+    vp[1:] = v0[0].reshape(max_pages, ps, h, hd)
+    pcache = {"kp": jnp.asarray(kp), "vp": jnp.asarray(vp),
+              "pages": jnp.asarray([[1, 2]], jnp.int32),
+              "index": jnp.asarray([idx], jnp.int32)}
+
+    out_c, new_c = layers.attention_apply(params, acfg, x, cache=contig)
+    out_p, new_p = layers.attention_apply(params, acfg, x, cache=pcache,
+                                          use_flash=use_flash)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_c),
+                               rtol=2e-4, atol=2e-4)
+    # In-reach rows (positions 6, 7 = last page rows 2, 3) got the new
+    # K/V; their page's earlier rows and the whole first page untouched.
+    np.testing.assert_array_equal(np.asarray(new_p["kp"][2, 2:]),
+                                  np.asarray(new_c["k"][0, idx:]))
+    np.testing.assert_array_equal(np.asarray(new_p["kp"][2, :2]),
+                                  kp[2, :2])
+    np.testing.assert_array_equal(np.asarray(new_p["kp"][1]), kp[1])
+    np.testing.assert_array_equal(np.asarray(new_p["vp"][1]), vp[1])
+    # The out-of-reach row (position 8) spilled into the null page only.
+    assert not np.array_equal(np.asarray(new_p["kp"][0]), kp[0])
+    np.testing.assert_array_equal(np.asarray(new_p["index"]), [idx + s])
+
+
 @given(seed=st.integers(0, 100), kvh=st.sampled_from([1, 2, 4]),
        use_flash=st.booleans())
 @settings(max_examples=8, deadline=None)

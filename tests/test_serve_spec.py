@@ -1,0 +1,324 @@
+"""Speculative decoding: for any forced accept/reject pattern, draft
+source and spec_k, the speculative engine's token stream and paged cache
+contents must be bit-identical to the non-speculative greedy engine —
+including across mid-stream preemption and at temperature > 0 (per-position
+sampling keys). Zero-accept ticks must degrade to plain decode, and the
+verify path must trace exactly one executable (check.sh gates this file in
+the serving subset)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.models import transformer as T
+from repro.serve import paged, spec
+from repro.serve.engine import (Request, ServeConfig, ServingEngine,
+                                greedy_generate)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get_smoke("qwen3-4b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _spec_cfg(**kw):
+    base = dict(max_len=64, batch=2, eos_id=-1, paged=True, page_size=8,
+                chunk_size=8, spec_k=2, draft="ngram")
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def _ref(params, cfg, prompt, n, max_len=64):
+    return np.asarray(greedy_generate(params, cfg,
+                                      jnp.asarray(prompt)[None], n,
+                                      max_len=max_len)[0]).tolist()
+
+
+# ----------------------------------------------------------------------------
+# Oracle: forced accept/reject patterns == plain greedy engine
+# ----------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 50), spec_k=st.sampled_from([1, 2, 4]),
+       pattern_bits=st.integers(0, 255))
+@settings(max_examples=10, deadline=None)
+def test_spec_stream_matches_reference_any_accept_pattern(seed, spec_k,
+                                                          pattern_bits):
+    """Property: whatever the draft gets right or wrong (all 8-bit
+    accept/reject patterns, spec_k in {1,2,4}), the emitted stream is
+    exactly the plain greedy engine's."""
+    cfg = configs.get_smoke("qwen3-4b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(seed)
+    prompt = rng.randint(2, cfg.vocab, rng.randint(3, 12)).astype(np.int32)
+    ref = _ref(params, cfg, prompt, 10)
+    pattern = [(pattern_bits >> b) & 1 for b in range(8)]
+    draft = spec.ScriptedDraft(len(prompt), ref, pattern, cfg.vocab)
+    eng = ServingEngine(params, cfg, _spec_cfg(batch=1, spec_k=spec_k,
+                                               draft=draft))
+    eng.submit(Request(rid=0, prompt=prompt, max_new=10))
+    got = eng.run_until_drained()
+    assert got[0] == ref
+    assert eng.verify_traces == 1
+    assert eng.pool.pages_in_use == 0
+
+
+def test_spec_cache_bit_identical_to_plain_engine(model):
+    """Mid-stream, the speculative slot's live K/V rows and write position
+    are bit-for-bit the plain engine's: rejected rows rolled back, the
+    null page having absorbed writes past the table's reach."""
+    cfg, params = model
+    rng = np.random.RandomState(1)
+    prompt = rng.randint(2, cfg.vocab, 7).astype(np.int32)
+    ref = _ref(params, cfg, prompt, 24)
+    # Accept-some pattern so verify ticks both accept and reject.
+    draft = spec.ScriptedDraft(len(prompt), ref, [1, 1, 0, 1], cfg.vocab)
+    se = ServingEngine(params, cfg, _spec_cfg(batch=1, spec_k=4,
+                                              draft=draft))
+    se.submit(Request(rid=0, prompt=prompt.copy(), max_new=24))
+    for _ in range(4):
+        se.tick()
+    n_emitted = len(se.slots[0].generated)
+    assert n_emitted > 4                      # speculation actually ran
+
+    pe = ServingEngine(params, cfg, _spec_cfg(batch=1, spec_k=0))
+    pe.submit(Request(rid=0, prompt=prompt.copy(), max_new=24))
+    while pe.slots[0] is None or len(pe.slots[0].generated) < n_emitted:
+        pe.tick()                             # plain: one token per tick
+    assert se.slots[0].generated == pe.slots[0].generated
+
+    live = len(prompt) + n_emitted - 1        # last token not yet written
+    for cs, cp in zip(se.caches, pe.caches):
+        np.testing.assert_array_equal(np.asarray(cs["index"]),
+                                      np.asarray(cp["index"]))
+        for period in range(cs["kp"].shape[0]):
+            ks_s, vs_s = paged.gather_kv(cs["kp"][period], cs["vp"][period],
+                                         cs["pages"][period])
+            ks_p, vs_p = paged.gather_kv(cp["kp"][period], cp["vp"][period],
+                                         cp["pages"][period])
+            np.testing.assert_array_equal(np.asarray(ks_s[:, :live]),
+                                          np.asarray(ks_p[:, :live]))
+            np.testing.assert_array_equal(np.asarray(vs_s[:, :live]),
+                                          np.asarray(vs_p[:, :live]))
+
+
+def test_spec_ngram_engine_matches_reference_multislot(model):
+    """Slot churn + mixed prompt lengths + the real n-gram drafter still
+    reproduce every reference stream exactly."""
+    cfg, params = model
+    rng = np.random.RandomState(0)
+    prompts = {rid: rng.randint(2, cfg.vocab, size=n).astype(np.int32)
+               for rid, n in enumerate((5, 16, 17, 27))}
+    eng = ServingEngine(params, cfg, _spec_cfg())
+    for rid, pr in prompts.items():
+        eng.submit(Request(rid=rid, prompt=pr, max_new=6))
+    got = eng.run_until_drained()
+    for rid, pr in prompts.items():
+        assert got[rid] == _ref(params, cfg, pr, 6), rid
+    assert eng.pool.pages_in_use == 0
+    assert eng.verify_traces == 1
+
+
+@pytest.mark.parametrize("use_flash", [False, True])
+def test_spec_flash_verify_matches_reference(model, use_flash):
+    """The verify executable runs the paged s>1 *flash* path under
+    use_flash; streams must stay identical to the sdpa reference."""
+    cfg, params = model
+    if use_flash:
+        cfg = dataclasses.replace(cfg, use_flash=True)
+    rng = np.random.RandomState(2)
+    prompts = {0: rng.randint(2, cfg.vocab, 5).astype(np.int32),
+               1: rng.randint(2, cfg.vocab, 11).astype(np.int32)}
+    eng = ServingEngine(params, cfg, _spec_cfg(spec_k=3))
+    for rid, pr in prompts.items():
+        eng.submit(Request(rid=rid, prompt=pr, max_new=5))
+    got = eng.run_until_drained()
+    for rid, pr in prompts.items():
+        assert got[rid] == _ref(params, model[0], pr, 5), rid
+
+
+# ----------------------------------------------------------------------------
+# Degradation, preemption, sampling parity
+# ----------------------------------------------------------------------------
+
+def test_zero_accept_ticks_degrade_to_plain_decode(model):
+    """An always-wrong draft must cost nothing but the verify width: every
+    verify tick emits exactly one (corrected) token and the stream is the
+    plain engine's."""
+    cfg, params = model
+    rng = np.random.RandomState(3)
+    prompt = rng.randint(2, cfg.vocab, 6).astype(np.int32)
+    ref = _ref(params, cfg, prompt, 8)
+    draft = spec.ScriptedDraft(len(prompt), ref, [0], cfg.vocab)  # reject all
+    eng = ServingEngine(params, cfg, _spec_cfg(batch=1, spec_k=4,
+                                               draft=draft))
+    eng.submit(Request(rid=0, prompt=prompt, max_new=8))
+    eng.tick()                                # prefill + first token
+    while eng.slots[0] is not None:
+        before = len(eng.slots[0].generated)
+        eng.tick()
+        after = (len(eng.slots[0].generated) if eng.slots[0] is not None
+                 else len(eng.finished[0]))
+        assert after == before + 1            # exactly plain-decode pace
+    assert eng.finished[0] == ref
+    assert eng.spec_accepted == 0
+    assert eng.spec_emitted == eng.spec_ticks
+
+
+def test_spec_preemption_parity(model):
+    """Pool exhaustion mid-speculation preempts the youngest slot; both
+    streams still finish bit-identical to the reference (the preempted
+    stream re-prefills prompt + generated and continues)."""
+    cfg, params = model
+    rng = np.random.RandomState(4)
+    pa = rng.randint(2, cfg.vocab, 15).astype(np.int32)
+    pb = rng.randint(2, cfg.vocab, 15).astype(np.int32)
+    eng = ServingEngine(params, cfg, _spec_cfg(n_pages=6))
+    eng.submit(Request(rid=0, prompt=pa, max_new=9))
+    eng.submit(Request(rid=1, prompt=pb, max_new=9))
+    got = eng.run_until_drained()
+    assert eng.preemptions >= 1
+    for rid, pr in ((0, pa), (1, pb)):
+        assert got[rid] == _ref(params, cfg, pr, 9), rid
+    assert eng.pool.pages_in_use == 0
+
+
+def test_spec_sampling_matches_plain_sampling(model):
+    """Temperature > 0: per-(request, position) sampling keys make the
+    speculative engine consume exactly the keys sequential decode would,
+    so the sampled streams are identical, not just same-distribution."""
+    cfg, params = model
+    rng = np.random.RandomState(5)
+    prompt = rng.randint(2, cfg.vocab, 7).astype(np.int32)
+    base = dict(temperature=0.7, seed=11, batch=1)
+    plain = ServingEngine(params, cfg, _spec_cfg(spec_k=0, **base))
+    plain.submit(Request(rid=0, prompt=prompt.copy(), max_new=10))
+    ref = plain.run_until_drained()[0]
+    for spec_k in (1, 3):
+        eng = ServingEngine(params, cfg, _spec_cfg(spec_k=spec_k, **base))
+        eng.submit(Request(rid=0, prompt=prompt.copy(), max_new=10))
+        assert eng.run_until_drained()[0] == ref, spec_k
+
+
+def test_preempted_stream_replays_sampling_rng(model):
+    """Satellite: requeue-at-head preemption preserves the slot's sampling
+    key stream — a preempted temperature-sampled request replays exactly
+    the tokens it would have produced uncontended."""
+    cfg, params = model
+    rng = np.random.RandomState(6)
+    pa = rng.randint(2, cfg.vocab, 15).astype(np.int32)
+    pb = rng.randint(2, cfg.vocab, 15).astype(np.int32)
+    base = dict(temperature=0.8, seed=7)
+    solo = ServingEngine(params, cfg, _spec_cfg(batch=1, spec_k=0, **base))
+    solo.submit(Request(rid=0, prompt=pa.copy(), max_new=9))
+    ref = solo.run_until_drained()[0]
+    for spec_k in (0, 2):                     # plain and speculative
+        eng = ServingEngine(params, cfg,
+                            _spec_cfg(n_pages=6, spec_k=spec_k, **base))
+        eng.submit(Request(rid=0, prompt=pa.copy(), max_new=9))
+        for _ in range(3):
+            eng.tick()
+        eng.submit(Request(rid=1, prompt=pb.copy(), max_new=9))
+        got = eng.run_until_drained()
+        assert eng.preemptions >= 1, spec_k
+        assert got[0] == ref, spec_k
+
+
+# ----------------------------------------------------------------------------
+# Trace gates + accounting
+# ----------------------------------------------------------------------------
+
+def test_spec_verify_single_trace_any_prompt_mix(model):
+    """One verify executable and one chunk executable, no matter the
+    prompt-length mix; the plain decode step is never traced in spec
+    mode (the verify IS the decode tick)."""
+    cfg, params = model
+    rng = np.random.RandomState(7)
+    eng = ServingEngine(params, cfg, _spec_cfg())
+    for rid, n in enumerate((3, 7, 9, 16, 17, 25, 31)):
+        eng.submit(Request(rid=rid, prompt=rng.randint(2, cfg.vocab, n)
+                           .astype(np.int32), max_new=4))
+    eng.run_until_drained()
+    assert eng.verify_traces == 1
+    assert set(eng.prefill_traces) == {eng.chunk}
+    assert eng.prefill_traces[eng.chunk] == 1
+    assert eng.decode_traces == 0
+
+
+def test_spec_accounting_consistent(model):
+    """spec_emitted = spec_accepted + one bonus per verify tick, minus
+    tokens truncated by max_new — and generated streams account for every
+    emitted token."""
+    cfg, params = model
+    rng = np.random.RandomState(8)
+    prompt = rng.randint(2, cfg.vocab, 6).astype(np.int32)
+    ref = _ref(params, cfg, prompt, 12)
+    draft = spec.ScriptedDraft(len(prompt), ref, [1], cfg.vocab)  # accept all
+    eng = ServingEngine(params, cfg, _spec_cfg(batch=1, spec_k=2,
+                                               draft=draft))
+    eng.submit(Request(rid=0, prompt=prompt, max_new=12))
+    eng.run_until_drained()
+    assert eng.finished[0] == ref
+    assert eng.spec_emitted <= eng.spec_accepted + eng.spec_ticks
+    # All-accepted drafts: every full tick emits spec_k + 1 tokens.
+    assert eng.spec_emitted == 11             # 12 minus the prefill token
+
+
+# ----------------------------------------------------------------------------
+# Draft sources
+# ----------------------------------------------------------------------------
+
+def test_ngram_draft_lookup_and_backoff():
+    d = spec.NgramDraft(n=3)
+    h = np.asarray([5, 6, 7, 9, 5, 6, 7], np.int32)
+    np.testing.assert_array_equal(d.propose(h, 1), [9])    # 3-gram hit
+    h2 = np.asarray([1, 2, 3, 4, 9, 9, 2], np.int32)
+    np.testing.assert_array_equal(d.propose(h2, 1), [3])   # backoff to 1
+    assert d.propose(np.asarray([1, 2, 3], np.int32), 2).size == 0
+
+
+def test_ngram_draft_extends_cyclically_at_tail():
+    """A periodic tail must draft k full tokens, not the one or two left
+    before the end of history — that is where the accept wins live."""
+    d = spec.NgramDraft(n=3)
+    h = np.asarray([9, 8] + [4, 4, 4, 4, 4], np.int32)
+    np.testing.assert_array_equal(d.propose(h, 4), [4, 4, 4, 4])
+    h2 = np.asarray([1, 7, 0, 7, 0, 7, 0], np.int32)
+    np.testing.assert_array_equal(d.propose(h2, 4), [7, 0, 7, 0])
+
+
+def test_model_draft_self_speculation_matches_greedy(model):
+    """ModelDraft with the target model and a window covering the whole
+    context proposes exactly the greedy continuation (the rollout is the
+    bucketed-prefill + greedy-decode pattern)."""
+    cfg, params = model
+    rng = np.random.RandomState(9)
+    prompt = rng.randint(2, cfg.vocab, 9).astype(np.int32)
+    ref = _ref(params, cfg, prompt, 3, max_len=16)
+    d = spec.ModelDraft(params, cfg, window=16)
+    np.testing.assert_array_equal(d.propose(prompt, 3), ref)
+
+
+def test_resolve_draft_variants(model):
+    cfg, params = model
+    assert isinstance(spec.resolve_draft(None, cfg, params),
+                      spec.NgramDraft)
+    assert isinstance(spec.resolve_draft("ngram", cfg, params),
+                      spec.NgramDraft)
+    md = spec.resolve_draft("self", cfg, params)
+    assert isinstance(md, spec.ModelDraft) and md.params is params
+    custom = spec.NgramDraft(n=2)
+    assert spec.resolve_draft(custom, cfg, params) is custom
+
+
+def test_longest_accept_bookkeeping():
+    assert spec.longest_accept([3, 4], [3, 4, 9]) == (2, [3, 4, 9])
+    assert spec.longest_accept([3, 5], [3, 4, 9]) == (1, [3, 4])
+    assert spec.longest_accept([7], [3, 1]) == (0, [3])
+    assert spec.longest_accept([], [6]) == (0, [6])
