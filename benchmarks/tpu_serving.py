@@ -34,6 +34,15 @@ verify executable) and ``spec_decode_32k`` (modeled —
 overhead at production shape, including the regime where it returns k=0
 and disables speculation).
 
+Distributed serving adds the last two: ``tp_pool_capacity`` (measured —
+an 8-host-device subprocess runs the same request mix through the
+single-device and mesh-sharded engines: token-stream parity flag, page
+tables spanning devices, 1-vs-8 pool capacity at the same ``n_pages``,
+and exactly one decode executable per mesh) and ``tp_decode_32k``
+(modeled — ``autotune.tp_decode_model``: the weight-stream term sharded
+by the mesh degree vs the per-layer activation all-reduces + unembed
+ring gather it buys them with, plus the x8 pool-capacity headline).
+
   PYTHONPATH=src python -m benchmarks.tpu_serving --out BENCH_serving.json
 """
 
@@ -41,6 +50,10 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
+import tempfile
 import time
 
 import jax
@@ -306,6 +319,96 @@ def _modeled_paged() -> dict:
     return out
 
 
+TP_DEVICES = 8
+
+_TP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, json
+sys.path.insert(0, sys.argv[1])
+import jax, numpy as np
+from repro import configs
+from repro.launch import mesh as mesh_lib
+from repro.models import transformer as T
+from repro.serve.engine import Request, ServeConfig, ServingEngine
+
+cfg = configs.get_smoke("qwen3-4b")
+params = T.init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.RandomState(2)
+prompts = [rng.randint(2, cfg.vocab, n).astype(np.int32)
+           for n in (9, 14, 6, 12)]
+kw = dict(max_len=64, batch=4, eos_id=-1, paged=True, page_size=4,
+          chunk_size=8, n_pages=64)
+
+def run(mesh):
+    eng = ServingEngine(params, cfg, ServeConfig(**kw), mesh=mesh)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p.copy(), max_new=10))
+    spans = {}
+    orig = eng.tick
+    def tick():
+        n = orig()
+        for rid, pages in eng.pool.slot_pages.items():
+            spans[rid] = spans.get(rid, set()) | {
+                eng.pool.device_of(p) for p in pages}
+        return n
+    eng.tick = tick
+    out = {k: list(v) for k, v in eng.run_until_drained().items()}
+    return out, eng, spans
+
+ref, e1, _ = run(None)
+got, e8, spans = run(mesh_lib.make_mesh((8,), ("model",)))
+print("TP_RESULTS:" + json.dumps({
+    "n_devices": e8.pool.n_devices,
+    "parity": ref == got,
+    "capacity_1dev": e1.pool.capacity,
+    "capacity_tp": e8.pool.capacity,
+    "max_device_span": max(len(v) for v in spans.values()),
+    "decode_executables_1dev": e1.decode_traces,
+    "decode_executables_tp": e8.decode_traces,
+    "preemptions_tp": e8.preemptions,
+}))
+"""
+
+
+def _measured_tp() -> dict:
+    """tp_pool_capacity cell: the acceptance oracle, measured — same
+    prompts through the 1-device and 8-device engines in a subprocess
+    with 8 host devices (the bench process itself sees one)."""
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                       "src")
+    with tempfile.NamedTemporaryFile("w", suffix=".py",
+                                     delete=False) as f:
+        f.write(_TP_SCRIPT)
+        script = f.name
+    try:
+        proc = subprocess.run([sys.executable, script, src],
+                              capture_output=True, text=True, timeout=600)
+        assert proc.returncode == 0, proc.stderr[-3000:]
+        line = [l for l in proc.stdout.splitlines()
+                if l.startswith("TP_RESULTS:")][0]
+        return json.loads(line[len("TP_RESULTS:"):])
+    finally:
+        os.unlink(script)
+
+
+def _modeled_tp() -> dict:
+    """tp_decode_32k cell: one decode tick 1-dev vs tensor-parallel at
+    production shape — the sharded weight stream vs the activation
+    collectives it costs, and the x(mesh) pool-capacity headline."""
+    cfg = configs.get_config(ARCH)
+    max_len = 32768
+    lengths = np.geomspace(256, max_len, 128).astype(int)
+    param_bytes = T.active_param_count(cfg) * 2.0        # bf16
+    out = autotune.tp_decode_model(
+        lengths, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.dhead, page_size=256, param_bytes=param_bytes,
+        d_model=cfg.d_model, n_layers=cfg.n_layers, n_devices=TP_DEVICES)
+    out["max_len"] = max_len
+    out["param_bytes"] = param_bytes
+    return out
+
+
 def run():
     m = _measured()
     c = _modeled()
@@ -314,6 +417,8 @@ def run():
     ck = _modeled_chunked()
     sp = _measured_spec()
     sk = _modeled_spec()
+    tpm = _measured_tp()
+    tpk = _modeled_tp()
     return [
         ("measured",
          f"{m['tokens_per_s']:.1f}tok/s;prefill={m['prefill_tokens']};"
@@ -347,6 +452,14 @@ def run():
          f"k={sk['chosen_k']};speedup={sk['speedup']:.2f}x;"
          f"accept={sk['accept_rate']:.2f};"
          f"k_low_accept={sk['k_at_low_accept_model_draft']}"),
+        ("tp_pool_capacity",
+         f"parity={tpm['parity']};devices={tpm['n_devices']};"
+         f"span={tpm['max_device_span']};"
+         f"executables={tpm['decode_executables_tp']}"),
+        ("tp_decode_32k",
+         f"speedup={tpk['speedup']:.2f}x;"
+         f"collective={tpk['collective_frac']*100:.0f}%;"
+         f"pool_x{tpk['pool_capacity_ratio']:.0f}"),
     ]
 
 
@@ -359,7 +472,9 @@ def main():
                "prefill_chunked_interleave": _measured_interleave(),
                "prefill_chunked_32k": _modeled_chunked(),
                "spec_decode_accept": _measured_spec(),
-               "spec_decode_32k": _modeled_spec()}
+               "spec_decode_32k": _modeled_spec(),
+               "tp_pool_capacity": _measured_tp(),
+               "tp_decode_32k": _modeled_tp()}
     print(json.dumps(payload, indent=1))
     assert payload["modeled_decode_32k"]["speedup"] > 1.0
     # Acceptance: paged holds < 50% of the contiguous reservation at
@@ -384,6 +499,18 @@ def main():
     assert payload["spec_decode_32k"]["chosen_k"] >= 1
     assert payload["spec_decode_32k"]["speedup"] > 1.0
     assert payload["spec_decode_32k"]["k_at_low_accept_model_draft"] == 0
+    # Acceptance: the mesh-sharded engine's streams are bit-identical to
+    # the single-device engine's, a slot's page table spans devices, the
+    # same n_pages gives the same capacity on either mesh, and each mesh
+    # compiled exactly one decode executable.
+    tp = payload["tp_pool_capacity"]
+    assert tp["parity"]
+    assert tp["max_device_span"] >= 2
+    assert tp["capacity_tp"] == tp["capacity_1dev"]
+    assert tp["decode_executables_tp"] == 1
+    assert tp["decode_executables_1dev"] == 1
+    assert payload["tp_decode_32k"]["speedup"] > 1.0
+    assert payload["tp_decode_32k"]["pool_capacity_ratio"] == TP_DEVICES
     if args.out:
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=1)

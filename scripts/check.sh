@@ -34,15 +34,22 @@ if [[ $# -eq 0 ]]; then
     # invariant: ServingEngine.prefill_traces must stay at one executable
     # for the chunked path no matter the prompt-length mix, and
     # test_serve_spec gates the same for the speculative verify
-    # executable (verify_traces == 1).
+    # executable (verify_traces == 1). test_serve_dist gates the
+    # distributed engine: 8-device parity, the device-sharded page pool,
+    # and the mesh-keyed tuning cache — its subprocess half needs 8 host
+    # devices, hence the XLA_FLAGS (the in-process half is mesh-blind).
     python -m pytest -x -q tests/test_serve.py tests/test_serve_paged.py \
         tests/test_serve_chunked.py tests/test_serve_spec.py \
         tests/test_flash_decode.py tests/test_paged_kv.py
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+        python -m pytest -x -q ${MARK[@]+"${MARK[@]}"} \
+        tests/test_serve_dist.py
     IGNORES=(--ignore=tests/test_serve.py --ignore=tests/test_serve_paged.py
              --ignore=tests/test_serve_chunked.py
              --ignore=tests/test_serve_spec.py
              --ignore=tests/test_flash_decode.py
-             --ignore=tests/test_paged_kv.py)
+             --ignore=tests/test_paged_kv.py
+             --ignore=tests/test_serve_dist.py)
 fi
 
 echo "== test suite =="

@@ -105,8 +105,20 @@ def check_bench_serving(path: str) -> None:
                    "spec_decode_32k.expected_tokens_per_tick",
                    "spec_decode_32k.speedup",
                    "spec_decode_32k.verify_overhead_frac",
-                   "spec_decode_32k.k_at_low_accept_model_draft"):
+                   "spec_decode_32k.k_at_low_accept_model_draft",
+                   "tp_pool_capacity.n_devices",
+                   "tp_pool_capacity.capacity_1dev",
+                   "tp_pool_capacity.capacity_tp",
+                   "tp_pool_capacity.max_device_span",
+                   "tp_pool_capacity.decode_executables_1dev",
+                   "tp_pool_capacity.decode_executables_tp",
+                   "tp_decode_32k.n_devices",
+                   "tp_decode_32k.speedup",
+                   "tp_decode_32k.collective_s",
+                   "tp_decode_32k.collective_frac",
+                   "tp_decode_32k.pool_capacity_ratio"):
         require(path, obj, dotted)
+    require(path, obj, "tp_pool_capacity.parity", bool)
     if len(FAILURES) == before:
         if not obj["modeled_decode_32k"]["speedup"] > 1.0:
             fail(path, "flash-decode speedup <= 1")
@@ -139,6 +151,25 @@ def check_bench_serving(path: str) -> None:
             fail(path, "modeled spec decode speedup <= 1")
         if obj["spec_decode_32k"]["k_at_low_accept_model_draft"] != 0:
             fail(path, "choose_spec_k failed to disable at low accept")
+        # Distributed-serving acceptance: the mesh engine's streams are
+        # bit-identical (parity flag *asserted*, not assumed), a slot's
+        # context spans >= 2 devices, same n_pages -> same capacity on
+        # either mesh, and exactly one decode executable per mesh.
+        tp = obj["tp_pool_capacity"]
+        if tp["parity"] is not True:
+            fail(path, "tp engine streams diverged from single-device")
+        if tp["max_device_span"] < 2:
+            fail(path, "no slot's page table spanned >= 2 devices")
+        if tp["capacity_tp"] != tp["capacity_1dev"]:
+            fail(path, "device-sharded pool changed global capacity")
+        if tp["decode_executables_tp"] != 1 or \
+                tp["decode_executables_1dev"] != 1:
+            fail(path, "decode compiled != 1 executable per mesh")
+        if not obj["tp_decode_32k"]["speedup"] > 1.0:
+            fail(path, "modeled tp decode speedup <= 1")
+        if obj["tp_decode_32k"]["pool_capacity_ratio"] != \
+                obj["tp_decode_32k"]["n_devices"]:
+            fail(path, "pool capacity ratio != mesh degree")
 
 
 SPECIFIC = {

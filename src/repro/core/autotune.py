@@ -249,10 +249,36 @@ TUNING_CACHE_PATH = os.environ.get(
 _tuning_cache: Optional[dict] = None
 
 
-def _cache_key(p: AttnProblem, tpu: hwmodel.TPUSpec) -> str:
-    return (f"{tpu.name}:sq={p.sq}:skv={p.skv}:h={p.n_heads}"
-            f":d={p.head_dim}:b={p.batch}:causal={int(p.causal)}"
-            f":bytes={p.in_bytes}")
+def _mesh_key(mesh_shape=None) -> str:
+    """Normalize a mesh/device-count descriptor into a cache-key token.
+
+    Accepts a ``{axis: size}`` mapping, an object with a ``.shape``
+    mapping (a jax Mesh), a string, or None — None keys by the process's
+    visible device count. Tuned entries are only portable across runs
+    that *partition identically*: a block shape measured fastest on one
+    chip can lose once per-device operand slices shrink 8x, so single-
+    and multi-device runs must not clobber each other's entries.
+    """
+    if mesh_shape is None:
+        try:
+            import jax
+            return f"dev{jax.device_count()}"
+        except Exception:            # jax-less analytical use
+            return "dev1"
+    if isinstance(mesh_shape, str):
+        return mesh_shape
+    shape = getattr(mesh_shape, "shape", mesh_shape)
+    if hasattr(shape, "items"):
+        return "mesh(" + ",".join(
+            f"{a}={int(n)}" for a, n in sorted(dict(shape).items())) + ")"
+    return "mesh(" + ",".join(str(int(n)) for n in tuple(shape)) + ")"
+
+
+def _cache_key(p: AttnProblem, tpu: hwmodel.TPUSpec,
+               mesh_shape=None) -> str:
+    return (f"{tpu.name}:{_mesh_key(mesh_shape)}:sq={p.sq}:skv={p.skv}"
+            f":h={p.n_heads}:d={p.head_dim}:b={p.batch}"
+            f":causal={int(p.causal)}:bytes={p.in_bytes}")
 
 
 def _load_tuning_cache() -> dict:
@@ -297,9 +323,16 @@ def _store_tuning_cache(key: str, entry: dict) -> None:
 
 def choose_attn_block(p: AttnProblem,
                       tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU,
-                      use_cache: bool = True) -> Tuple[AttnBlock, dict]:
-    """Minimum-modeled-time (block_q, block_k), persisted across processes."""
-    key = _cache_key(p, tpu)
+                      use_cache: bool = True,
+                      mesh_shape=None) -> Tuple[AttnBlock, dict]:
+    """Minimum-modeled-time (block_q, block_k), persisted across processes.
+
+    The cache key includes backend *and* mesh shape/device count
+    (``mesh_shape``; None -> the process's device count), so single- and
+    multi-device runs keep separate entries instead of clobbering each
+    other — the per-device problem a kernel sees under SPMD is a
+    different problem."""
+    key = _cache_key(p, tpu, mesh_shape)
     if use_cache:
         hit = _load_tuning_cache().get(key)
         if hit is not None:
@@ -363,10 +396,52 @@ def decode_attn_speedup(max_len: int, lengths: Iterable[int], n_heads: int,
 PAGE_LOOKUP_S = 5e-8
 
 
+@dataclasses.dataclass(frozen=True)
+class TPServe:
+    """Tensor-parallel serving geometry for the analytical cost models.
+
+    ``n_devices`` shards the weight stream, the dense FLOPs, and (when the
+    relevant head count divides) the attention work; each transformer
+    layer pays two activation all-reduces (attn out-proj + MLP down-proj,
+    the classic Megatron row-parallel cut) and the forward ends with one
+    all-gather assembling the unembed ring's sharded logits GEMM.
+    """
+    n_devices: int
+    d_model: int
+    n_layers: int
+
+
+def _tp_collective_s(tokens: float, tp: Optional["TPServe"],
+                     in_bytes: int,
+                     tpu: hwmodel.TPUSpec) -> float:
+    """Per-forward collective seconds at ``tokens`` total query tokens
+    under ``tp``; 0 when unsharded (the single-device models stay exact)."""
+    if tp is None or tp.n_devices <= 1:
+        return 0.0
+    from repro.core import interconnect
+    payload = float(tokens) * tp.d_model * in_bytes
+    ar = interconnect.collective_time("all_reduce", payload,
+                                      tp.n_devices, tpu).time_s
+    ag = interconnect.collective_time("all_gather", payload,
+                                      tp.n_devices, tpu).time_s
+    return 2.0 * tp.n_layers * ar + ag
+
+
+def _tp_shard(tp: Optional["TPServe"], heads: int) -> Tuple[int, int]:
+    """(dense shard factor, attention shard factor) under ``tp`` — the
+    attention factor falls back to 1 when ``heads`` doesn't divide, the
+    same divisibility rule the runtime sharding ruleset applies."""
+    if tp is None or tp.n_devices <= 1:
+        return 1, 1
+    d = tp.n_devices
+    return d, (d if heads % d == 0 else 1)
+
+
 def paged_decode_model(max_len: int, lengths: Iterable[int], n_heads: int,
                        n_kv_heads: int, head_dim: int, page_size: int,
                        in_bytes: int = 2,
                        page_lookup_s: float = PAGE_LOOKUP_S,
+                       tp: Optional[TPServe] = None,
                        tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU) -> dict:
     """Paged vs contiguous decode for one engine tick: same FLOPs, a
     page-table-lookup overhead term per visited K/V block, and an HBM
@@ -377,6 +452,11 @@ def paged_decode_model(max_len: int, lengths: Iterable[int], n_heads: int,
     finer pages waste less capacity (internal fragmentation shrinks) but
     pay more translation work; the engine's ``page_size`` knob sits on the
     same curve.
+
+    Under ``tp`` the attention work shards over kv heads (when they
+    divide the mesh) and both variants pay the per-tick activation
+    collectives — paging and tensor parallelism compose, they don't
+    interact, so the contig-vs-paged delta is unchanged.
     """
     # Deferred: keeps core free of a module-level serve/kernels dependency
     # (kernels.ops imports this module at its top level).
@@ -386,6 +466,8 @@ def paged_decode_model(max_len: int, lengths: Iterable[int], n_heads: int,
     group = max(1, n_heads // n_kv_heads)
     lengths = [int(l) for l in lengths]
     slots = len(lengths)
+    _, attn_shard = _tp_shard(tp, n_kv_heads)
+    collective_s = _tp_collective_s(slots, tp, in_bytes, tpu)
 
     contig_s, paged_s, visited_total = 0.0, 0.0, 0
     for length in lengths:
@@ -394,14 +476,17 @@ def paged_decode_model(max_len: int, lengths: Iterable[int], n_heads: int,
         c, _ = choose_attn_block(p, tpu, use_cache=False)
         block_k = _largest_divisor(page_size, c.block_k)
         t, terms = attn_cost(p, AttnBlock(c.block_q, block_k), tpu)
-        contig_s += t
+        contig_s += t / attn_shard
         visited = terms["visited_blocks"]
         visited_total += visited
-        paged_s += t + visited * page_lookup_s
+        paged_s += (t + visited * page_lookup_s) / attn_shard
+    contig_s += collective_s
+    paged_s += collective_s
 
     out = reservation(lengths, max_len, page_size)   # the one accounting
     bytes_per_row = 2 * n_kv_heads * head_dim * in_bytes     # K + V
     out.update({
+        "collective_s": collective_s,
         "contig_s": contig_s,
         "paged_s": paged_s,
         "lookup_overhead_frac": (paged_s - contig_s) / contig_s
@@ -426,6 +511,7 @@ def prefill_chunk_model(prompt_len: int, chunk: int, n_heads: int,
                         n_kv_heads: int, head_dim: int, page_size: int,
                         in_bytes: int = 2,
                         page_lookup_s: float = PAGE_LOOKUP_S,
+                        tp: Optional[TPServe] = None,
                         tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU) -> dict:
     """Price chunked paged prefill of one ``prompt_len`` prompt at one
     chunk size: per-chunk causal attention over the previously-written
@@ -445,9 +531,13 @@ def prefill_chunk_model(prompt_len: int, chunk: int, n_heads: int,
     blocks re-stream once per q head even under GQA — pricing per q head
     is faithful to the kernel's actual DMA (the decode kernel's
     b*kvh-flattened layout is what lets ``paged_decode_model`` price per
-    kv head instead).
+    kv head instead). Under ``tp`` the attention shards over q heads when
+    they divide the mesh and every chunk pays the activation collectives
+    (a per-chunk fixed cost — one more term small chunks amortize badly).
     """
+    _, attn_shard = _tp_shard(tp, n_heads)
     del n_kv_heads
+    coll_per_chunk = _tp_collective_s(chunk, tp, in_bytes, tpu)
     n_chunks = _ceil_div(prompt_len, chunk)
     attn_s, lookup_s, visited_total, worst_chunk_s = 0.0, 0.0, 0, 0.0
     for i in range(n_chunks):
@@ -459,13 +549,16 @@ def prefill_chunk_model(prompt_len: int, chunk: int, n_heads: int,
         blk = AttnBlock(min(c.block_q, chunk),
                         _largest_divisor(page_size, c.block_k))
         t, terms = attn_cost(p, blk, tpu)
+        t /= attn_shard
         visited = terms["visited_blocks"]
-        chunk_s = t + visited * page_lookup_s + CHUNK_DISPATCH_S
+        chunk_s = t + visited * page_lookup_s + CHUNK_DISPATCH_S \
+            + coll_per_chunk
         attn_s += t
         lookup_s += visited * page_lookup_s
         visited_total += visited
         worst_chunk_s = max(worst_chunk_s, chunk_s)
-    total_s = attn_s + lookup_s + n_chunks * CHUNK_DISPATCH_S
+    collective_s = n_chunks * coll_per_chunk
+    total_s = attn_s + lookup_s + n_chunks * CHUNK_DISPATCH_S + collective_s
     return {
         "chunk": chunk,
         "n_chunks": n_chunks,
@@ -473,6 +566,7 @@ def prefill_chunk_model(prompt_len: int, chunk: int, n_heads: int,
         "attn_s": attn_s,
         "lookup_s": lookup_s,
         "dispatch_s": n_chunks * CHUNK_DISPATCH_S,
+        "collective_s": collective_s,
         "visited_blocks": visited_total,
         "interleave_latency_s": worst_chunk_s,
         "lookup_overhead_frac": lookup_s / attn_s if attn_s else 0.0,
@@ -537,6 +631,7 @@ def spec_decode_model(lengths: Iterable[int], n_heads: int,
                       in_bytes: int = 2,
                       page_lookup_s: float = PAGE_LOOKUP_S,
                       plain_tick_s: Optional[float] = None,
+                      tp: Optional[TPServe] = None,
                       tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU) -> dict:
     """Price one speculative verify tick against ``k + 1`` plain decode
     ticks — the serving-side instance of the paper's latency-hiding
@@ -568,7 +663,10 @@ def spec_decode_model(lengths: Iterable[int], n_heads: int,
     group = max(1, n_heads // n_kv_heads)
     lengths = [int(l) for l in lengths]
     slots = len(lengths)
-    weight_stream_s = param_bytes / tpu.hbm_bandwidth
+    dense_shard, attn_shard = _tp_shard(tp, n_kv_heads)
+    # TP shards the weight stream too — each device streams its slice of
+    # every matrix; the price is the per-tick activation collectives.
+    weight_stream_s = param_bytes / tpu.hbm_bandwidth / dense_shard
     n_params = param_bytes / in_bytes
 
     def tick_s(width: int) -> float:
@@ -582,9 +680,12 @@ def spec_decode_model(lengths: Iterable[int], n_heads: int,
             blk = AttnBlock(c.block_q, _largest_divisor(page_size,
                                                         c.block_k))
             t, terms = attn_cost(p, blk, tpu)
-            attn += t + terms["visited_blocks"] * page_lookup_s
-        dense = 2.0 * n_params * slots * width / tpu.peak_bf16_flops
-        return weight_stream_s + attn + dense + CHUNK_DISPATCH_S
+            attn += (t + terms["visited_blocks"] * page_lookup_s) \
+                / attn_shard
+        dense = 2.0 * n_params * slots * width \
+            / (dense_shard * tpu.peak_bf16_flops)
+        return weight_stream_s + attn + dense + CHUNK_DISPATCH_S \
+            + _tp_collective_s(slots * width, tp, in_bytes, tpu)
 
     # The width-1 tick is k-independent; choose_spec_k precomputes it
     # once and threads it through its candidate loop.
@@ -618,6 +719,7 @@ def choose_spec_k(lengths: Iterable[int], n_heads: int,
                   draft_token_s: float = NGRAM_DRAFT_S,
                   ks: Tuple[int, ...] = (1, 2, 3, 4, 6, 8),
                   in_bytes: int = 2,
+                  tp: Optional[TPServe] = None,
                   tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU
                   ) -> Tuple[int, dict]:
     """Pick the verify width the serving engine speculates with.
@@ -638,7 +740,8 @@ def choose_spec_k(lengths: Iterable[int], n_heads: int,
                                   param_bytes, draft_bytes=draft_bytes,
                                   draft_token_s=draft_token_s,
                                   in_bytes=in_bytes,
-                                  plain_tick_s=plain_tick_s, tpu=tpu)
+                                  plain_tick_s=plain_tick_s, tp=tp,
+                                  tpu=tpu)
         plain_tick_s = terms["plain_tick_s"]
         if best_terms is None or \
                 terms["tokens_per_s_spec"] > best_terms["tokens_per_s_spec"]:
@@ -647,6 +750,53 @@ def choose_spec_k(lengths: Iterable[int], n_heads: int,
         best_k = 0
     return best_k, dict(best_terms, chosen_k=best_k,
                         candidates=len(list(ks)))
+
+
+def tp_decode_model(lengths: Iterable[int], n_heads: int,
+                    n_kv_heads: int, head_dim: int, page_size: int,
+                    param_bytes: float, d_model: int, n_layers: int,
+                    n_devices: int, in_bytes: int = 2,
+                    page_lookup_s: float = PAGE_LOOKUP_S,
+                    tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU) -> dict:
+    """Price one paged decode tick single-device vs tensor-parallel over
+    ``n_devices`` — the serving-side instance of the paper's NVLink-era
+    scaling question: decode is weight-stream bound, so sharding every
+    matrix cuts the dominant HBM term by the mesh degree, and what's left
+    to beat is the per-layer activation all-reduces plus the unembed
+    ring's gather (``collective_s``), tiny at decode widths because the
+    payload is activations (slots x d_model) rather than weights.
+
+    The other headline is capacity, not speed: the KV page pool is
+    device-sharded with pages as the shard unit, so the same per-device
+    HBM budget holds ``n_devices`` times the pages globally
+    (``pool_capacity_ratio``) — a slot's context can span devices.
+    """
+    lengths = [int(l) for l in lengths]
+    slots = len(lengths)
+    tp = TPServe(n_devices=n_devices, d_model=d_model, n_layers=n_layers)
+    common = dict(n_heads=n_heads, n_kv_heads=n_kv_heads,
+                  head_dim=head_dim, page_size=page_size,
+                  k=0, accept_rate=0.0, param_bytes=param_bytes,
+                  in_bytes=in_bytes, page_lookup_s=page_lookup_s, tpu=tpu)
+    base = spec_decode_model(lengths, **common)
+    shard = spec_decode_model(lengths, tp=tp, **common)
+    tick_1, tick_tp = base["plain_tick_s"], shard["plain_tick_s"]
+    collective_s = _tp_collective_s(slots, tp, in_bytes, tpu)
+    return {
+        "n_devices": n_devices,
+        "slots": slots,
+        "tick_1dev_s": tick_1,
+        "tick_tp_s": tick_tp,
+        "weight_stream_1dev_s": base["weight_stream_s"],
+        "weight_stream_tp_s": shard["weight_stream_s"],
+        "collective_s": collective_s,
+        "collective_frac": collective_s / tick_tp if tick_tp else 0.0,
+        "attn_sharded": n_kv_heads % max(1, n_devices) == 0,
+        "tokens_per_s_1dev": slots / tick_1 if tick_1 else 0.0,
+        "tokens_per_s_tp": slots / tick_tp if tick_tp else 0.0,
+        "speedup": tick_1 / tick_tp if tick_tp else float("inf"),
+        "pool_capacity_ratio": float(n_devices),
+    }
 
 
 # ----------------------------------------------------------------------------

@@ -116,6 +116,64 @@ def compute_terms(arch: str, shape: str, mesh_name: str, chips: int,
     return t
 
 
+def collective_matmul_terms(m: int, k: int, n: int, axis_size: int,
+                            in_bytes: int = 2,
+                            tpu: hwmodel.TPUSpec = _TPU,
+                            ici_links: int = 2
+                            ) -> Dict[str, RooflineTerms]:
+    """Price the lowerings of one TP matmul ``(m,k) @ (k,n)`` with the
+    contraction dim sharded over ``axis_size`` devices, as roofline cells:
+
+    * ``all_gather`` — the naive SPMD lowering: gather x, then GEMM. Wire
+      bytes land *before* the first MAC, so its honest time is the serial
+      ``step_time_s``.
+    * ``ag_ring`` — ``dist.collective_matmul.ag_matmul``: same wire bytes
+      moved as n-1 collective-permutes that hide under the per-step GEMMs,
+      so its honest time is ``step_time_overlapped_s`` (out replicated).
+    * ``rs_ring`` — ``dist.collective_matmul.rs_matmul``: the ring
+      circulates (m, n/axis) *partial sums* instead of (m, k/axis) input
+      blocks, output stays sharded — cheaper wire when n < k, and the
+      consumer-side layout MoE dispatch wants.
+    * ``all_reduce`` — row-parallel x@w then psum: 2x the reduce-scatter
+      wire bytes, the baseline ``rs_ring`` halves.
+
+    Per-chip compute/memory terms are identical across variants except the
+    output residency (replicated for gather variants, sharded for
+    ``rs_ring``); the table exists to show where the ring variants win.
+    """
+    from repro.core import interconnect
+
+    f = axis_size
+    flops = 2.0 * m * k * n / f                     # GEMM evenly sharded
+    x_b, w_b = m * k * in_bytes / f, k * n * in_bytes
+    out_full, out_shard = m * n * in_bytes, m * n * in_bytes / f
+    wire = {
+        "all_gather": interconnect.collective_time(
+            "all_gather", m * k * in_bytes, f, tpu,
+            links=ici_links).bytes_on_wire,
+        "ag_ring": interconnect.collective_time(
+            "all_gather", m * k * in_bytes, f, tpu,
+            links=ici_links).bytes_on_wire,     # same bytes, overlapped
+        "rs_ring": interconnect.collective_time(
+            "reduce_scatter", m * n * in_bytes, f, tpu,
+            links=ici_links).bytes_on_wire,
+        "all_reduce": interconnect.collective_time(
+            "all_reduce", m * n * in_bytes, f, tpu,
+            links=ici_links).bytes_on_wire,
+    }
+    resident = {"all_gather": out_full, "ag_ring": out_full,
+                "rs_ring": out_shard, "all_reduce": out_full}
+    out: Dict[str, RooflineTerms] = {}
+    for variant, coll in wire.items():
+        out[variant] = compute_terms(
+            arch=f"matmul_{variant}", shape=f"{m}x{k}x{n}",
+            mesh_name=f"tp{f}", chips=f, hlo_flops=flops,
+            hlo_bytes=x_b + w_b + resident[variant],
+            collective_bytes=coll, model_flops=2.0 * m * k * n,
+            tpu=tpu, ici_links=ici_links)
+    return out
+
+
 def terms_from_compiled(arch: str, shape: str, mesh_name: str, chips: int,
                         compiled, model_flops: float,
                         hlo_text: Optional[str] = None,

@@ -60,3 +60,68 @@ def ag_matmul(x, w, mesh, axis: str = "model"):
                    in_specs=(P(None, axis), P(None, None)),
                    out_specs=P(None, None), check_rep=False)
     return fn(x, w)
+
+
+def rs_matmul(x, w, mesh, axis: str = "model"):
+    """``x @ w`` as a psum-scatter ring: the reduce–scatter dual of
+    ``ag_matmul``.
+
+    x: (m, k) sharded (k over ``axis``); w: (k, n) replicated; out:
+    (m, n) sharded (n over ``axis``). Where ``ag_matmul`` circulates the
+    *inputs* so every device ends with the full product, this ring
+    circulates the *partial sums*: device i contributes its
+    ``x_block @ w_block`` slice into the accumulator destined for each
+    output column block as it passes by, so after n-1 hops device i
+    holds output block i, fully reduced. Same overlap structure
+    (permute hides under the GEMM), half the resident output — the
+    variant MoE dispatch wants, where the next op consumes the output
+    already sharded. Falls back to a plain matmul (replicated out) when
+    the axis is trivial or k or n doesn't divide it.
+    """
+    n_shards = int(dict(mesh.shape)[axis])
+    m, k = x.shape
+    n = w.shape[-1]
+    if n_shards == 1 or k % n_shards or n % n_shards:
+        return x @ w
+    k_block = k // n_shards
+    n_block = n // n_shards
+    perm = [(j, (j + 1) % n_shards) for j in range(n_shards)]
+
+    def ring(x_block, w_full):
+        # The accumulator at device i at step s is destined for output
+        # block (i - 1 - s) mod n: each device folds in its contribution
+        # for that block, permutes the partial forward, and after the
+        # final (unpermuted) step holds its own block, fully reduced.
+        i = jax.lax.axis_index(axis)
+        acc = jnp.zeros((m, n_block),
+                        jnp.promote_types(x_block.dtype, w_full.dtype))
+        for s in range(n_shards):
+            dest = (i - 1 - s) % n_shards
+            w_block = jax.lax.dynamic_slice(
+                w_full, (i * k_block, dest * n_block), (k_block, n_block))
+            acc = acc + x_block @ w_block
+            if s + 1 < n_shards:
+                acc = jax.lax.ppermute(acc, axis, perm)
+        return acc
+
+    fn = shard_map(ring, mesh=mesh,
+                   in_specs=(P(None, axis), P(None, None)),
+                   out_specs=P(None, axis), check_rep=False)
+    return fn(x, w)
+
+
+def serve_unembed(mesh, axis: str = "model"):
+    """Serving entry point: an ``unembed_fn`` for ``models.transformer.
+    forward`` that routes the decode/verify logit matmul — the single
+    biggest GEMM on the serving path, (slots·width, d_model) x
+    (d_model, vocab) — through the overlapped ``ag_matmul`` ring instead
+    of the naive all-gather lowering. Output logits stay replicated, so
+    the engine's sampling and stream bookkeeping are unchanged."""
+
+    def unembed_fn(unembed_params, x):
+        w = unembed_params["lm_head"].astype(x.dtype)
+        b, s, d = x.shape
+        out = ag_matmul(x.reshape(b * s, d), w, mesh, axis=axis)
+        return out.reshape(b, s, w.shape[-1])
+
+    return unembed_fn

@@ -47,6 +47,10 @@ _DEFAULT_RULES: Dict[str, Any] = {
     "experts": "model",
     "expert_capacity": None,
     "stage": "stage",
+    # Serving: the paged KV pool shards over its page dim (serve.dist) —
+    # pages, not slots, are the shard unit, so one slot's table can span
+    # devices and pool capacity scales with the mesh.
+    "kv_pages": "model",
 }
 
 # Parameter leaf name -> logical names of its *trailing* dims.  Leading

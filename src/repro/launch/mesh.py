@@ -39,5 +39,18 @@ def single_device_mesh():
     return make_mesh((1, 1), ("data", "model"))
 
 
+def make_serving_mesh(tp: Optional[int] = None):
+    """1-D tensor-parallel mesh for the serving engine: ``("model",)``
+    over ``tp`` devices (default: all visible). Serving has no data axis
+    — every device holds the same slots and a shard of every weight and
+    of the KV page pool; ``tp=1`` returns None so the engine takes its
+    unsharded (mesh-blind) path rather than a degenerate shard_map."""
+    tp = tp if tp is not None else jax.device_count()
+    if tp <= 1:
+        return None
+    assert tp <= jax.device_count(), (tp, jax.device_count())
+    return make_mesh((tp,), ("model",))
+
+
 def describe(mesh) -> str:
     return "x".join(f"{k}={v}" for k, v in mesh.shape.items())

@@ -2,6 +2,13 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \\
       --requests 8 --max-new 16
+
+Distributed serving shards the same engine over a 1-D mesh (weights
+tensor-parallel, KV page pool device-sharded — see serve/README.md):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \\
+      --paged --tp 8
 """
 
 from __future__ import annotations
@@ -13,6 +20,7 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro.launch import mesh as mesh_lib
 from repro.models import transformer as T
 from repro.serve.engine import Request, ServeConfig, ServingEngine
 
@@ -44,11 +52,32 @@ def main(argv=None):
                     help="draft source for --spec-k: 'ngram' (prompt "
                          "lookup, no second model), 'self' (sliding-window "
                          "self-speculation), or a configs/ arch name")
+    ap.add_argument("--tp", type=int, default=None,
+                    help="shard the engine tensor-parallel over this many "
+                         "devices (paged only; weights TP, KV page pool "
+                         "device-sharded). 1 = unsharded")
+    ap.add_argument("--mesh", default=None,
+                    help="explicit serving mesh as AXIS=N (e.g. model=8); "
+                         "alternative spelling of --tp")
     args = ap.parse_args(argv)
 
     if args.spec_k and not args.paged:
         raise SystemExit("--spec-k needs --paged (verify runs the paged "
                          "s>1 attention path)")
+    if args.tp is not None and args.mesh is not None:
+        raise SystemExit("--tp and --mesh are alternative spellings; "
+                         "pass one")
+    mesh = None
+    if args.mesh is not None:
+        axis, _, size = args.mesh.partition("=")
+        if axis != "model" or not size.isdigit():
+            raise SystemExit(f"--mesh wants model=N, got {args.mesh!r}")
+        mesh = mesh_lib.make_serving_mesh(int(size))
+    elif args.tp is not None:
+        mesh = mesh_lib.make_serving_mesh(args.tp)
+    if mesh is not None and not args.paged:
+        raise SystemExit("--tp/--mesh need --paged (the shard unit of the "
+                         "distributed engine is the KV page)")
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
         else configs.get_config(args.arch)
@@ -68,7 +97,8 @@ def main(argv=None):
                                        n_pages=n_pages,
                                        chunk_size=args.chunk_size,
                                        spec_k=args.spec_k,
-                                       draft=args.draft))
+                                       draft=args.draft),
+                           mesh=mesh)
     rng = np.random.RandomState(args.seed)
     t0 = time.time()
     for rid in range(args.requests):
@@ -82,8 +112,10 @@ def main(argv=None):
           f"in {dt:.2f}s ({toks/dt:.1f} tok/s)")
     if engine.pool is not None:
         occ = engine.pool.occupancy()
-        print(f"  paged: {occ['high_water']}/{occ['n_pages'] - 1} pages "
-              f"high-water ({args.page_size} rows each), "
+        mesh_note = (f" over {occ['n_devices']} devices"
+                     if occ["n_devices"] > 1 else "")
+        print(f"  paged: {occ['high_water']}/{occ['capacity']} pages "
+              f"high-water ({args.page_size} rows each){mesh_note}, "
               f"chunk={engine.chunk}, "
               f"{engine.admission_rejections} admission holds, "
               f"{engine.preemptions} preemptions")

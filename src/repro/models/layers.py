@@ -278,6 +278,13 @@ def _paged_apply(params: Params, cfg: AttnConfig, x, q, k, v,
     prefix); freed/idle slots (zeroed table rows) and positions at/past
     the table's reach land in the null page, so they can never corrupt a
     live slot's pages.
+
+    When the ambient ruleset shards the pool over a mesh axis
+    (``serve.dist.active_pool_mesh``), the scatter and the page-table
+    walk run as shard_map ops that resolve global page ids to each
+    device's (device, local_page) block; attention then consumes the
+    device-resolved contiguous view. Everything else — table, write
+    positions, masking — is identical to the single-device walk.
     """
     b, s, _ = x.shape
     idx = cache["index"]                       # (b,) per-slot lengths
@@ -292,6 +299,11 @@ def _paged_apply(params: Params, cfg: AttnConfig, x, q, k, v,
     # would overwrite row 0 of the slot's *last* live page instead.
     page = jnp.where(pos < max_pages * page_size, page, 0)
     row = pos % page_size
+    from repro.serve import dist as serve_dist
+    pool_mesh = serve_dist.active_pool_mesh()
+    if pool_mesh is not None:
+        return _paged_apply_sharded(params, cfg, x, q, k, v, cache, page,
+                                    row, pool_mesh, use_flash)
     kp = cache["kp"].at[page, row].set(k.astype(cache["kp"].dtype))
     vp = cache["vp"].at[page, row].set(v.astype(cache["vp"].dtype))
     lengths = idx + s
@@ -316,6 +328,42 @@ def _paged_apply(params: Params, cfg: AttnConfig, x, q, k, v,
         # mask).
         from repro.serve import paged as paged_mod
         ck, cv = paged_mod.gather_kv(kp, vp, cache["pages"])
+        skv = ck.shape[1]
+        qi = jnp.arange(s)[None, :, None]
+        kj = jnp.arange(skv)[None, None, :]
+        mask = jnp.where(kj <= idx[:, None, None] + qi, 0.0,
+                         -1e30).astype(jnp.float32)
+        out = sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), mask=mask,
+                   expand_kv=cfg.expand_kv, probs_fp32=cfg.probs_fp32)
+    out = sharding.shard(out, "batch", "seq", "heads", "head_dim")
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return sharding.shard(y, "batch", "seq", "embed"), new_cache
+
+
+def _paged_apply_sharded(params, cfg: AttnConfig, x, q, k, v, cache,
+                         page, row, pool_mesh, use_flash: bool):
+    """Paged attention against a device-sharded pool (``serve.dist``).
+
+    The scatter drops rows each device does not own; the gather is the
+    distributed page-table walk (one psum assembles the contiguous view,
+    exact because exactly one device contributes each row). The s == 1
+    flash path hands the resolved view to the contiguous flash-decode
+    kernel — per-slot lengths still bound what it streams.
+    """
+    from repro.serve import dist as serve_dist
+    mesh, paxis = pool_mesh
+    b, s, _ = x.shape
+    idx = cache["index"]
+    kp, vp = serve_dist.scatter_pages(cache["kp"], cache["vp"], k, v,
+                                      page, row, mesh, paxis)
+    new_cache = {"kp": kp, "vp": vp, "pages": cache["pages"],
+                 "index": idx + s}
+    ck, cv = serve_dist.gather_pages(kp, vp, cache["pages"], mesh, paxis)
+    if use_flash and s == 1 and not cfg.expand_kv:
+        from repro.kernels import ops as kernel_ops
+        out = kernel_ops.flash_decode(
+            q[:, 0], ck.astype(q.dtype), cv.astype(q.dtype), idx + 1)[:, None]
+    else:
         skv = ck.shape[1]
         qi = jnp.arange(s)[None, :, None]
         kj = jnp.arange(skv)[None, None, :]

@@ -290,13 +290,18 @@ def _stack_apply_noncausal(blocks, cfg: ModelConfig, x):
 
 def forward(params: Params, cfg: ModelConfig, tokens,
             frontend_embeds=None, caches=None, positions=None,
-            cross_kv=None) -> Tuple[Any, Optional[List[Any]], Any]:
+            cross_kv=None,
+            unembed_fn=None) -> Tuple[Any, Optional[List[Any]], Any]:
     """Forward pass -> (logits, new_caches, aux_loss).
 
     ``frontend_embeds``: encoder input (whisper) or cross-attention source
     (vision); stubbed modality frontends provide it precomputed.
     ``cross_kv``: precomputed encoder output — serving passes it so decode
     steps do not re-run the encoder.
+    ``unembed_fn``: override for the final logit matmul — the sharded
+    serving engine routes it through the overlapped collective ring
+    (``dist.collective_matmul.serve_unembed``); ``None`` keeps the plain
+    ``layers.unembed``.
     """
     x = layers.embed(params["embed"], tokens, cfg.dtype)
     if cross_kv is not None:
@@ -319,7 +324,7 @@ def forward(params: Params, cfg: ModelConfig, tokens,
     x, new_caches, aux = _stack_apply(params["blocks"], cfg, x,
                                       cross_kv=cross_kv, caches=caches)
     x = layers.norm(cfg.norm, params["ln_f"], x)
-    logits = layers.unembed(params["unembed"], x)
+    logits = (unembed_fn or layers.unembed)(params["unembed"], x)
     return logits, new_caches, aux
 
 
@@ -394,8 +399,8 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def init_paged_caches(cfg: ModelConfig, batch: int, max_len: int,
-                      page_size: int, n_pages: int,
-                      dtype=None) -> List[Any]:
+                      page_size: int, n_pages: int, dtype=None,
+                      mesh=None, pool_axis: str = "model") -> List[Any]:
     """Paged decode caches: per pattern position a shared KV page pool
     instead of per-slot ``max_len`` reservations (``serve.paged``).
 
@@ -413,6 +418,10 @@ def init_paged_caches(cfg: ModelConfig, batch: int, max_len: int,
 
     Only attention patterns page (SSM state is O(1) per slot — nothing to
     page); hybrid stacks must serve contiguous.
+
+    With ``mesh`` the pools are placed page-sharded over ``pool_axis``
+    (page tables and write indices replicated) — the device-sharded pool
+    ``serve.dist`` walks; ``n_pages`` must divide the axis.
     """
     assert all(k in ("attn", "cross") for k in cfg.pattern), \
         ("paged KV caches require an attention-only pattern", cfg.pattern)
@@ -433,6 +442,9 @@ def init_paged_caches(cfg: ModelConfig, batch: int, max_len: int,
             lambda a: jnp.broadcast_to(a[None], (cfg.periods,) + a.shape),
             c)
         caches.append(stacked)
+    if mesh is not None:
+        from repro.serve import dist as serve_dist
+        caches = serve_dist.shard_caches(caches, mesh, pool_axis)
     return caches
 
 

@@ -66,6 +66,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist import sharding as sharding_mod
 from repro.models import transformer as T
 from repro.serve import paged as paged_mod
 from repro.serve import spec as spec_mod
@@ -92,6 +93,13 @@ class ServeConfig:
     # prices when that is the right call.
     draft: Any = None            # spec_k > 0: a serve.spec DraftSource,
     # or "ngram" (default) / "self" / a configs/ arch name.
+    spec_adapt_every: Optional[int] = None  # re-choose the live draft
+    # width from the measured accept rate every N verify ticks
+    # (``serve.spec.rechoose_k`` -> ``core.autotune.choose_spec_k``);
+    # None keeps k fixed at spec_k. The verify executable's width stays
+    # spec_k + 1 (one trace); only how many drafts are requested adapts,
+    # and a collapsed accept rate drives ``k_live`` to 0 — plain decode
+    # ticks — until the next window re-opens speculation.
     prefill_chunks_per_tick: Optional[int] = None  # per-tick prefill
     # chunk budget; None runs one chunk for *every* mid-prefill slot.
     # With a budget, the shortest-remaining-first order decides who runs.
@@ -106,11 +114,12 @@ def prefill(params, cfg: T.ModelConfig, tokens, caches,
 
 
 def decode_step(params, cfg: T.ModelConfig, last_tokens, caches,
-                frontend_embeds=None):
+                frontend_embeds=None, unembed_fn=None):
     """One decode step: (b,) token ids -> (b,) next ids + new caches."""
     logits, caches, _ = T.forward(params, cfg, last_tokens[:, None],
                                   caches=caches,
-                                  frontend_embeds=frontend_embeds)
+                                  frontend_embeds=frontend_embeds,
+                                  unembed_fn=unembed_fn)
     return logits[:, -1], caches
 
 
@@ -180,10 +189,34 @@ class ServingEngine:
     ``eos_id`` on a later tick.
     """
 
-    def __init__(self, params, cfg: T.ModelConfig, serve_cfg: ServeConfig):
-        self.params = params
+    def __init__(self, params, cfg: T.ModelConfig, serve_cfg: ServeConfig,
+                 mesh=None):
         self.cfg = cfg
         self.scfg = serve_cfg
+        self.mesh = mesh
+        # Distributed serving (``serve.dist``): weights tensor-parallel
+        # under the serving ruleset, the page pool device-sharded over the
+        # pool axis, the unembed GEMM routed through the overlapped
+        # collective ring. All host-side scheduling below is mesh-blind —
+        # it prices admission/preemption against the *global* pool, so the
+        # sharded engine's token streams and scheduling decisions are
+        # bit-identical to the single-device paged engine's.
+        if mesh is not None:
+            from repro.dist import collective_matmul
+            from repro.serve import dist as serve_dist
+            assert serve_cfg.paged, "mesh serving is paged-only"
+            self._ruleset = serve_dist.serve_ruleset(mesh)
+            axis = self._ruleset._rule(serve_dist.POOL_RULE)
+            self._pool_axis = axis
+            self._n_dev = int(dict(mesh.shape).get(axis, 1))
+            self._unembed_fn = collective_matmul.serve_unembed(mesh, axis)
+            self.params = self._shard_params(params, mesh)
+        else:
+            self._ruleset = None
+            self._pool_axis = None
+            self._n_dev = 1
+            self._unembed_fn = None
+            self.params = params
         # Bucketing pads the prompt on the right; that only composes with
         # attention layers (masked K/V). SSM/hybrid stacks carry recurrent
         # state through every position, so they prefill at exact length
@@ -198,11 +231,18 @@ class ServingEngine:
             n_pages = serve_cfg.n_pages or (
                 1 + serve_cfg.batch * serve_cfg.max_len
                 // serve_cfg.page_size)
+            if n_pages % self._n_dev:
+                # Striping needs equal blocks; rounding up only ever adds
+                # capacity. Explicit n_pages on a mesh should already
+                # divide it (parity runs pass the same pool both ways).
+                n_pages += self._n_dev - n_pages % self._n_dev
             self.pool: Optional[paged_mod.PageAllocator] = \
-                paged_mod.PageAllocator(n_pages, serve_cfg.page_size)
+                paged_mod.PageAllocator(n_pages, serve_cfg.page_size,
+                                        n_devices=self._n_dev)
             self.caches = T.init_paged_caches(
                 cfg, serve_cfg.batch, serve_cfg.max_len,
-                serve_cfg.page_size, n_pages)
+                serve_cfg.page_size, n_pages, mesh=mesh,
+                pool_axis=self._pool_axis or "model")
             chunk = serve_cfg.chunk_size
             if chunk is None:
                 from repro.core import autotune
@@ -244,6 +284,10 @@ class ServingEngine:
         self._slot_seq: Dict[int, int] = {}     # slot -> admission sequence
         self._admit_seq = 0
         self.spec_k = serve_cfg.spec_k
+        self.k_live = self.spec_k     # adaptive draft width (<= spec_k)
+        self._adapt_ticks = 0         # verify ticks since last re-choice
+        self._adapt_proposed = 0      # drafted tokens in the window
+        self._adapt_accepted = 0      # ... of which accepted
         if self.spec_k:
             assert self.spec_k >= 1
             assert self.pool is not None, \
@@ -251,10 +295,31 @@ class ServingEngine:
                 "paged s>1 attention path)"
             self.draft = spec_mod.resolve_draft(serve_cfg.draft, cfg, params)
             self._verify_fn = self._make_verify_fn()
+        if serve_cfg.spec_adapt_every is not None:
+            assert serve_cfg.spec_adapt_every >= 1 and self.spec_k
         if serve_cfg.prefill_chunks_per_tick is not None:
             assert serve_cfg.prefill_chunks_per_tick >= 1, \
                 serve_cfg.prefill_chunks_per_tick
         self._step = self._make_decode_step()
+
+    # -- distributed placement ------------------------------------------------
+
+    def _shard_params(self, params, mesh):
+        """Tensor-parallel placement: each leaf lands with the spec its
+        name resolves to under the serving ruleset (heads/mlp/vocab over
+        "model"; norms and non-divisible leaves replicate). device_put
+        up front — the executables then see committed shardings and emit
+        no surprise resharding on the hot path."""
+        from repro.dist import sharding as shd
+
+        def put(path, leaf):
+            names = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                          for p in path)
+            spec = shd.param_spec(names, leaf.shape, self._ruleset)
+            return jax.device_put(
+                leaf, jax.sharding.NamedSharding(mesh, spec))
+
+        return jax.tree_util.tree_map_with_path(put, params)
 
     # -- jitted executables ---------------------------------------------------
 
@@ -265,7 +330,10 @@ class ServingEngine:
 
         def step(params, last_tokens, caches, rids, ts):
             self.decode_traces += 1          # runs at trace time only
-            logits, caches = decode_step(params, cfg, last_tokens, caches)
+            with sharding_mod.use_ruleset(self._ruleset):
+                logits, caches = decode_step(
+                    params, cfg, last_tokens, caches,
+                    unembed_fn=self._unembed_fn)
             # Keys fold inside the executable (no per-tick host fold_ins);
             # greedy never consumes them, so skip the fold entirely.
             keys = spec_mod.fold_row_keys(base, rids, ts) if temp else None
@@ -290,7 +358,10 @@ class ServingEngine:
 
         def verify(params, tokens, caches, rids, t0s):
             self.verify_traces += 1          # runs at trace time only
-            logits, caches, _ = T.forward(params, cfg, tokens, caches=caches)
+            with sharding_mod.use_ruleset(self._ruleset):
+                logits, caches, _ = T.forward(params, cfg, tokens,
+                                              caches=caches,
+                                              unembed_fn=self._unembed_fn)
             keys = spec_mod.fold_span_keys(base, rids, t0s, width) \
                 if temp else None
             return pick(logits, keys), caches
@@ -409,7 +480,10 @@ class ServingEngine:
                 idx = jnp.full((c["index"].shape[0], 1), start,
                                c["index"].dtype)
                 view.append(dict(c, pages=pages, index=idx))
-            logits, view, _ = T.forward(params, cfg, tokens, caches=view)
+            with sharding_mod.use_ruleset(self._ruleset):
+                logits, view, _ = T.forward(params, cfg, tokens,
+                                            caches=view,
+                                            unembed_fn=self._unembed_fn)
             last = jax.lax.dynamic_index_in_dim(logits[0], last_in_chunk,
                                                 axis=0, keepdims=False)
             new_caches = [
@@ -639,10 +713,10 @@ class ServingEngine:
                     # forever.
                     with_decode = paged_mod.pages_for(
                         min(plen + 1 + self.spec_k, self.scfg.max_len), ps)
-                    if with_decode > self.pool.n_pages - 1:
+                    if with_decode > self.pool.capacity:
                         raise paged_mod.PagePoolExhausted(
                             f"request {req.rid}: needs {with_decode} pages "
-                            f"but the pool holds {self.pool.n_pages - 1}; "
+                            f"but the pool holds {self.pool.capacity}; "
                             f"raise n_pages or page_size")
                     first = paged_mod.chunk_page_need(
                         0, min(self.chunk, plen), 0, ps, self.scfg.max_len)
@@ -766,12 +840,38 @@ class ServingEngine:
         if not active:
             return len(self._prefilling)
         n = len(active) + len(self._prefilling)
-        if self.spec_k:
+        if self.spec_k and self.k_live:
             self._spec_tick(active)
+            self._maybe_adapt_k()
         else:
             self._decode_tick(active)
         self._reset_prefill_positions()
         return n
+
+    def _maybe_adapt_k(self) -> None:
+        """Runtime feedback into the spec cost model: every
+        ``spec_adapt_every`` verify ticks, re-choose the live draft
+        width from the window's measured accept rate
+        (``serve.spec.rechoose_k`` -> ``core.autotune.choose_spec_k``).
+        A collapsing accept rate prices speculation below plain decode
+        and drives ``k_live`` to 0 — the disable regime, terminal for
+        this engine: the workload has shown drafts don't land, so the
+        verify width is pure overhead from here on. The verify
+        executable (width spec_k + 1) stays traced either way."""
+        every = self.scfg.spec_adapt_every
+        if every is None:
+            return
+        self._adapt_ticks += 1
+        if self._adapt_ticks < every:
+            return
+        rate = (self._adapt_accepted / self._adapt_proposed
+                if self._adapt_proposed else 0.0)
+        self.k_live, _ = spec_mod.rechoose_k(
+            self.cfg, self.scfg.page_size,
+            [max(1, l) for l in self.context_lengths()], rate, self.spec_k)
+        self._adapt_ticks = 0
+        self._adapt_proposed = 0
+        self._adapt_accepted = 0
 
     def _decode_tick(self, active: List[int]) -> None:
         """One plain batched decode step: one token per active slot."""
@@ -807,7 +907,7 @@ class ServingEngine:
         in the null page (positions past the table's reach). Slot state
         after the tick is therefore bit-identical to a plain engine that
         emitted the same tokens."""
-        k, width = self.spec_k, self.spec_k + 1
+        k, width = self.k_live, self.spec_k + 1
         tokens = np.zeros((self.scfg.batch, width), np.int32)
         tokens[:, 0] = np.asarray(self.last_tok)
         base_len: Dict[int, int] = {}
@@ -816,6 +916,8 @@ class ServingEngine:
             req = self.slots[i]
             # Write position before the tick (host-side, no device sync).
             base_len[i] = self._effective_len(req) - 1
+            # Draft at the *live* width (adaptive: <= spec_k); the verify
+            # executable keeps its fixed spec_k + 1 shape regardless.
             prop = np.asarray(
                 self.draft.propose(self._draft_history(req), k),
                 np.int32).ravel()[:k]
@@ -839,6 +941,8 @@ class ServingEngine:
                 tokens[i, 1:1 + n_prop[i]], picks[i, :n_prop[i] + 1])
             self.spec_ticks += 1
             self.spec_accepted += accepted
+            self._adapt_proposed += n_prop[i]
+            self._adapt_accepted += accepted
             done, n_rec = False, 0
             for tok in emitted:
                 n_rec += 1

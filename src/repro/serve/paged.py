@@ -14,6 +14,15 @@ Pieces:
   freed/idle slots (whose page-table rows are zeroed) exactly like a
   faulting PTE redirected to a scratch frame. Allocation is LIFO so a
   freed slot's pages are the next ones handed out (warm-page reuse).
+  With ``n_devices > 1`` the pool is striped over a device mesh axis in
+  contiguous blocks of ``n_pages // n_devices`` pages: global page id
+  ``p`` lives on device ``p // block`` at local slot ``p % block`` — the
+  (device, local_page) pair the sharded pools resolve (``serve.dist``).
+  Allocation picks the least-loaded device first, so a long slot's table
+  naturally spans devices — the paper's NVLink remote-access story
+  applied to KV: capacity scales with the mesh while the logical page
+  table (and every admission/preemption decision priced against it)
+  stays flat and global.
 * ``gather_kv`` — pure-jnp page-table walk: materializes the contiguous
   (b, max_pages*page_size, kvh, d) view of a pool. Reference/parity path
   for the paged flash-decode kernel (and the non-flash engine path).
@@ -71,46 +80,89 @@ class PageAllocator:
     """Free-list allocator over the shared KV page pool.
 
     ``n_pages`` counts physical pages *including* the null page, so the
-    allocatable capacity is ``n_pages - 1``. Invariants (asserted):
+    allocatable ``capacity`` is ``n_pages - 1`` on *any* mesh: sharding
+    the pool over ``n_devices`` changes where a page physically lives,
+    never how many a request costs — admission and preemption stay priced
+    against the global pool. Invariants (asserted):
 
     * a page is never handed out while still owned by a live slot,
     * the null page is never handed out,
-    * every page is either free or owned by exactly one slot.
+    * every page is either free or owned by exactly one slot,
+    * equivalently: no (device, local_page) pair is live twice.
     """
 
     n_pages: int
     page_size: int
+    n_devices: int = 1
 
     def __post_init__(self):
+        assert self.n_devices >= 1
+        assert self.n_pages % self.n_devices == 0, \
+            (self.n_pages, self.n_devices)
+        self.block = self.n_pages // self.n_devices
         assert self.n_pages >= 2, "pool needs the null page + 1 real page"
         assert self.page_size >= 1
-        # LIFO free list: freshly freed pages are reused first.
-        self._free: List[int] = list(range(self.n_pages - 1, NULL_PAGE, -1))
+        # Per-device LIFO free lists: freshly freed pages are reused first.
+        # The null page (global 0, device 0 local 0) never enters a list.
+        self._free_by_dev: List[List[int]] = [
+            list(range((d + 1) * self.block - 1, d * self.block - 1, -1))
+            for d in range(self.n_devices)]
+        self._free_by_dev[0] = list(range(self.block - 1, NULL_PAGE, -1))
         self.slot_pages: Dict[int, List[int]] = {}
         self._live: set = set()
         self.high_water = 0
+
+    # -- device geometry ------------------------------------------------------
+
+    def device_of(self, page: int) -> int:
+        """Mesh-axis index of the device holding global page id ``page``."""
+        return int(page) // self.block
+
+    def local_of(self, page: int) -> int:
+        """Device-local physical page slot of global page id ``page``."""
+        return int(page) % self.block
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages: the pool minus the null page."""
+        return self.n_pages - 1
 
     # -- alloc/free -----------------------------------------------------------
 
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        return sum(len(f) for f in self._free_by_dev)
+
+    @property
+    def _free(self) -> List[int]:
+        """Flat view of the free lists (introspection/tests only)."""
+        return [p for f in self._free_by_dev for p in f]
 
     @property
     def pages_in_use(self) -> int:
         return len(self._live)
 
     def can_alloc(self, n: int) -> bool:
-        return len(self._free) >= n
+        return self.free_pages >= n
 
     def alloc(self, slot: int, n: int = 1) -> List[int]:
         """Take ``n`` pages for ``slot``; raises ``PagePoolExhausted``
-        (allocating nothing) when the free list is short."""
-        if len(self._free) < n:
+        (allocating nothing) when the free lists are short.
+
+        Pages are pulled from the least-loaded device first (ties go to
+        the lowest device index), so slots stripe across the mesh and a
+        single long context spans devices instead of exhausting one
+        block — global capacity is the only admission constraint.
+        """
+        if self.free_pages < n:
             raise PagePoolExhausted(
-                f"need {n} pages for slot {slot}, {len(self._free)} free "
-                f"({self.pages_in_use}/{self.n_pages - 1} in use)")
-        got = [self._free.pop() for _ in range(n)]
+                f"need {n} pages for slot {slot}, {self.free_pages} free "
+                f"({self.pages_in_use}/{self.capacity} in use)")
+        got = []
+        for _ in range(n):
+            dev = max(range(self.n_devices),
+                      key=lambda d: (len(self._free_by_dev[d]), -d))
+            got.append(self._free_by_dev[dev].pop())
         for p in got:
             assert p != NULL_PAGE and p not in self._live, p
             self._live.add(p)
@@ -119,13 +171,14 @@ class PageAllocator:
         return got
 
     def free_slot(self, slot: int) -> List[int]:
-        """Return every page owned by ``slot`` to the free list."""
+        """Return every page owned by ``slot`` to its device's free list."""
         pages = self.slot_pages.pop(slot, [])
         for p in pages:
             assert p in self._live, p
             self._live.discard(p)
         # Reversed: re-admission walks pages in allocation order again.
-        self._free.extend(reversed(pages))
+        for p in reversed(pages):
+            self._free_by_dev[self.device_of(p)].append(p)
         return pages
 
     def reset(self) -> None:
@@ -139,6 +192,14 @@ class PageAllocator:
         page) — the paged analogue of the contiguous ``slots * max_len``."""
         return (self.pages_in_use + 1) * self.page_size
 
+    def device_occupancy(self) -> List[int]:
+        """Live pages per device — sums to ``pages_in_use`` (the property
+        test's conservation law for the sharded pool)."""
+        occ = [0] * self.n_devices
+        for p in self._live:
+            occ[self.device_of(p)] += 1
+        return occ
+
     def occupancy(self, lengths: Optional[Dict[int, int]] = None) -> dict:
         """Pool utilization; with per-slot ``lengths`` also the internal
         fragmentation (allocated-but-unused rows — the page-granularity
@@ -146,12 +207,16 @@ class PageAllocator:
         out = {
             "n_pages": self.n_pages,
             "page_size": self.page_size,
+            "capacity": self.capacity,
+            "n_devices": self.n_devices,
             "pages_in_use": self.pages_in_use,
             "pages_free": self.free_pages,
             "high_water": self.high_water,
-            "utilization": self.pages_in_use / max(1, self.n_pages - 1),
+            "utilization": self.pages_in_use / max(1, self.capacity),
             "rows_resident": self.rows_resident(),
         }
+        if self.n_devices > 1:
+            out["pages_in_use_by_device"] = self.device_occupancy()
         if lengths is not None:
             alloc_rows = sum(len(ps) * self.page_size
                              for ps in self.slot_pages.values())

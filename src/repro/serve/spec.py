@@ -105,6 +105,28 @@ def longest_accept(drafts: Sequence[int],
     return a, [int(t) for t in drafts[:a]] + [int(targets[a])]
 
 
+def rechoose_k(cfg: T.ModelConfig, page_size: int, lengths, accept_rate: float,
+               k_max: int, in_bytes: int = 4) -> Tuple[int, dict]:
+    """Feed a *measured* accept rate back into the spec cost model.
+
+    ``choose_spec_k`` was built to be consulted offline with a guessed
+    accept rate; the engine instead measures ``accepted / proposed`` over
+    a window of verify ticks (its ``spec_accepted`` / ``spec_ticks``
+    counters) and re-prices the draft width against the current slot
+    lengths here — candidates capped at ``k_max``, the verify
+    executable's traced width. Returns 0 when no width beats plain
+    decode (the disable regime a collapsing accept rate lands in).
+    """
+    from repro.core import autotune
+
+    param_bytes = float(T.active_param_count(cfg)) * in_bytes
+    k, terms = autotune.choose_spec_k(
+        [int(l) for l in lengths], cfg.n_heads, cfg.n_kv_heads, cfg.dhead,
+        page_size, float(accept_rate), param_bytes,
+        ks=tuple(range(1, k_max + 1)), in_bytes=in_bytes)
+    return min(k, k_max), terms
+
+
 # ----------------------------------------------------------------------------
 # Draft sources
 # ----------------------------------------------------------------------------
