@@ -1,0 +1,229 @@
+"""Breaking-point bench: sweep offered load until the serving engine
+breaks, and characterize the break.
+
+This is the paper's method applied to our own stack: the
+microbenchmarks drive each cache level past its comfortable operating
+point and report *where* the latency cliff sits and *what* the
+degraded plateau looks like — here the swept axis is offered load
+(requests per engine tick through the open-loop traffic generator)
+and the reported surface is what a production operator reads:
+
+  * ``breaking_point_sweep`` — per offered rate: TTFT/TPOT p50/p99,
+    goodput (completed tokens per tick), shed rate, preemptions, pool
+    high water; plus the **knee point** — the offered rate where
+    goodput peaks. Past the knee the engine is saturated: more offered
+    load buys shed and preemption churn, not throughput, so goodput
+    must be monotone non-increasing from there (the validator gates
+    it).
+  * ``breaking_point_faults`` — the canonical seeded fault schedule
+    (pool squeeze -> accept collapse -> churn storm) against open-loop
+    traffic on the full stack: every request must complete or cleanly
+    reject, surviving streams bit-identical to the fault-free engine's
+    (prefix-exact for force-completions), all fault windows armed and
+    cleared.
+
+All latencies are in *engine ticks* (deterministic, hardware-blind:
+one tick = one decode step for every active slot); multiply by the
+measured per-tick wall time — reported as ``tick_wall_s`` — to get
+seconds on this machine. Tick-domain numbers are what make the
+committed cells schema-gateable with hard inequalities: the same
+sweep reproduces bit-for-bit on any host.
+
+  PYTHONPATH=src python -m benchmarks.breaking_point --out BENCH_serving.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import transformer as T
+from repro.serve import traffic
+from repro.serve.engine import Request, ServeConfig, ServingEngine, SLOClass
+from repro.serve.faults import FaultInjector, canonical_schedule
+
+ARCH = "qwen3-4b"
+MAX_LEN = 64
+BATCH = 2
+PAGE_SIZE = 8
+N_PAGES = 17
+N_REQUESTS = 24
+RATES = (0.25, 0.5, 1.0, 2.0, 4.0)
+SEED = 11
+
+
+def _serve_cfg(**kw) -> ServeConfig:
+    base = dict(
+        max_len=MAX_LEN, batch=BATCH, eos_id=-1, paged=True,
+        page_size=PAGE_SIZE, chunk_size=8, n_pages=N_PAGES,
+        classes=(SLOClass("default", ttft_slo=16, tpot_slo=4.0),),
+        max_queue=8, max_preemptions=3, degrade=True)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def _traffic_cfg(rate: float, vocab: int) -> traffic.TrafficConfig:
+    return traffic.TrafficConfig(
+        rate=rate, n_requests=N_REQUESTS, seed=SEED, vocab=vocab,
+        classes=(traffic.TrafficClass("default", prompt_lo=4, prompt_hi=20,
+                                      out_lo=2, out_hi=8),))
+
+
+def _engine(params, cfg, **kw) -> ServingEngine:
+    eng = ServingEngine(params, cfg, _serve_cfg(**kw))
+    # Warm the chunk + decode executables outside the timed region.
+    eng.submit(Request(rid=-1, prompt=np.resize(
+        np.arange(3, 12, dtype=np.int32), eng.chunk + 1), max_new=2))
+    eng.run_until_drained()
+    eng.pool.high_water = 0
+    eng.admission_rejections = 0
+    eng.preemptions = 0
+    eng.ticks = 0
+    return eng
+
+
+def sweep_cell(params, cfg) -> dict:
+    points = []
+    for rate in RATES:
+        eng = _engine(params, cfg)
+        arr = traffic.TrafficGenerator(
+            _traffic_cfg(rate, cfg.vocab)).arrivals()
+        t0 = time.perf_counter()
+        res = traffic.run_open_loop(eng, arr, max_ticks=4000)
+        wall = time.perf_counter() - t0
+        assert res["unresolved"] == [], (rate, res["unresolved"])
+        s = traffic.summarize(eng, arr)
+        points.append({
+            "offered_rate": rate,
+            "ticks": s["ticks"],
+            "tick_wall_s": wall / max(1, s["ticks"]),
+            "done": s["done"], "forced": s["forced"],
+            "rejected": s["rejected"],
+            "ttft_p50": s["ttft_p50"], "ttft_p99": s["ttft_p99"],
+            "tpot_p50": s["tpot_p50"], "tpot_p99": s["tpot_p99"],
+            "goodput_tokens_per_tick": s["goodput_tokens_per_tick"],
+            "shed_rate": s["shed_rate"],
+            "ttft_slo_attainment": s.get("ttft_slo_attainment", 1.0),
+            "preemptions": s["preemptions"],
+            "admission_holds": s["admission_holds"],
+            "downshifts": s["downshifts"],
+            "degraded_ticks": s["degraded_ticks"],
+            "pool_high_water_pages": eng.pool.high_water,
+            "pool_capacity_pages": eng.pool.capacity,
+        })
+        print(f"  rate {rate:>5}: goodput "
+              f"{points[-1]['goodput_tokens_per_tick']:.3f} tok/tick, "
+              f"ttft p50/p99 {s['ttft_p50']:.0f}/{s['ttft_p99']:.0f}, "
+              f"shed {s['shed_rate']:.2f}")
+    knee_i = max(range(len(points)),
+                 key=lambda i: points[i]["goodput_tokens_per_tick"])
+    return {
+        "arch": ARCH, "batch": BATCH, "n_pages": N_PAGES,
+        "n_requests": N_REQUESTS, "seed": SEED,
+        "offered_rates": list(RATES),
+        "points": points,
+        "knee_rate": points[knee_i]["offered_rate"],
+        "knee_goodput_tokens_per_tick":
+            points[knee_i]["goodput_tokens_per_tick"],
+    }
+
+
+def faults_cell(params, cfg) -> dict:
+    arr = traffic.TrafficGenerator(
+        _traffic_cfg(1.5, cfg.vocab)).arrivals()
+
+    def run(injector):
+        eng = _engine(params, cfg, spec_k=2, draft="ngram",
+                      spec_adapt_every=4, spec_probe_every=4)
+        res = traffic.run_open_loop(eng, arr, max_ticks=4000,
+                                    injector=injector)
+        if injector is not None:
+            injector.finish(eng)
+        return eng, res
+
+    inj = FaultInjector(canonical_schedule(t0=4, dwell=8, gap=6))
+    faulty, res = run(inj)
+    clean, res_clean = run(None)
+    assert res["unresolved"] == [] and res_clean["unresolved"] == []
+
+    parity, compared = True, 0
+    for a in arr:
+        if clean.outcome.get(a.rid) != "done":
+            continue
+        out = faulty.outcome.get(a.rid, "")
+        if out == "done":
+            parity &= faulty.finished[a.rid] == clean.finished[a.rid]
+            compared += 1
+        elif out.startswith("forced"):
+            got = faulty.finished[a.rid]
+            parity &= got == clean.finished[a.rid][:len(got)]
+            compared += 1
+    s = traffic.summarize(faulty, arr)
+    return {
+        "arch": ARCH, "seed": SEED, "n_requests": len(arr),
+        "faults_injected": inj.injected, "faults_cleared": inj.cleared,
+        "unresolved": len(res["unresolved"]),
+        "parity": bool(parity), "streams_compared": compared,
+        "done": s["done"], "forced": s["forced"], "rejected": s["rejected"],
+        "shed_rate": s["shed_rate"],
+        "preemptions": s["preemptions"],
+        "admission_holds": s["admission_holds"],
+        "downshifts": s["downshifts"],
+        "degraded_ticks": s["degraded_ticks"],
+        "spec_probes": faulty.spec_probes,
+        "pool_pages_leaked": faulty.pool.pages_in_use,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="merge cells into this BENCH json (read-modify-"
+                         "write; other cells are preserved)")
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(ARCH)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+
+    print("offered-load sweep:")
+    sweep = sweep_cell(params, cfg)
+    print("canonical fault schedule:")
+    faults = faults_cell(params, cfg)
+
+    payload = {"breaking_point_sweep": sweep,
+               "breaking_point_faults": faults}
+    print(json.dumps(payload, indent=1))
+
+    # Acceptance (mirrored as hard gates in scripts/validate_artifacts.py).
+    pts = sweep["points"]
+    knee_i = sweep["offered_rates"].index(sweep["knee_rate"])
+    for a, b in zip(pts[knee_i:], pts[knee_i + 1:]):
+        assert b["goodput_tokens_per_tick"] <= \
+            a["goodput_tokens_per_tick"] * 1.05, "goodput rose past knee"
+    for p in pts:
+        assert p["ttft_p99"] >= p["ttft_p50"]
+        assert 0.0 <= p["shed_rate"] <= 1.0
+    assert faults["unresolved"] == 0
+    assert faults["parity"] is True
+    assert faults["faults_injected"] == faults["faults_cleared"] == 3
+    assert faults["pool_pages_leaked"] == 0
+
+    if args.out:
+        existing = {}
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f)
+        existing.update(payload)
+        with open(args.out, "w") as f:
+            json.dump(existing, f, indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -44,12 +44,19 @@ if [[ $# -eq 0 ]]; then
     XLA_FLAGS="--xla_force_host_platform_device_count=8" \
         python -m pytest -x -q ${MARK[@]+"${MARK[@]}"} \
         tests/test_serve_dist.py
+    echo "== fault-injection smoke =="
+    # The robustness contract: open-loop traffic determinism, SLO
+    # admission/shedding, and the seeded fault schedule (pool squeeze,
+    # accept collapse, churn storm) with bit-identical surviving streams.
+    python -m pytest -x -q tests/test_serve_faults.py tests/test_traffic.py
     IGNORES=(--ignore=tests/test_serve.py --ignore=tests/test_serve_paged.py
              --ignore=tests/test_serve_chunked.py
              --ignore=tests/test_serve_spec.py
              --ignore=tests/test_flash_decode.py
              --ignore=tests/test_paged_kv.py
-             --ignore=tests/test_serve_dist.py)
+             --ignore=tests/test_serve_dist.py
+             --ignore=tests/test_serve_faults.py
+             --ignore=tests/test_traffic.py)
 fi
 
 echo "== test suite =="

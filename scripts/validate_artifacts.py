@@ -116,9 +116,21 @@ def check_bench_serving(path: str) -> None:
                    "tp_decode_32k.speedup",
                    "tp_decode_32k.collective_s",
                    "tp_decode_32k.collective_frac",
-                   "tp_decode_32k.pool_capacity_ratio"):
+                   "tp_decode_32k.pool_capacity_ratio",
+                   "breaking_point_sweep.knee_rate",
+                   "breaking_point_sweep.knee_goodput_tokens_per_tick",
+                   "breaking_point_faults.faults_injected",
+                   "breaking_point_faults.faults_cleared",
+                   "breaking_point_faults.unresolved",
+                   "breaking_point_faults.streams_compared",
+                   "breaking_point_faults.shed_rate",
+                   "breaking_point_faults.spec_probes",
+                   "breaking_point_faults.pool_pages_leaked"):
         require(path, obj, dotted)
     require(path, obj, "tp_pool_capacity.parity", bool)
+    require(path, obj, "breaking_point_faults.parity", bool)
+    require(path, obj, "breaking_point_sweep.offered_rates", list)
+    require(path, obj, "breaking_point_sweep.points", list)
     if len(FAILURES) == before:
         if not obj["modeled_decode_32k"]["speedup"] > 1.0:
             fail(path, "flash-decode speedup <= 1")
@@ -170,6 +182,38 @@ def check_bench_serving(path: str) -> None:
         if obj["tp_decode_32k"]["pool_capacity_ratio"] != \
                 obj["tp_decode_32k"]["n_devices"]:
             fail(path, "pool capacity ratio != mesh degree")
+        # Breaking-point acceptance: the sweep found a knee and the
+        # latency surface is sane (ordered percentiles, shed is a rate,
+        # goodput monotone non-increasing past saturation), and the
+        # canonical fault schedule left zero hangs, zero leaked pages,
+        # and bit-identical surviving streams.
+        bp = obj["breaking_point_sweep"]
+        pts = bp["points"]
+        if not pts:
+            fail(path, "breaking-point sweep has no points")
+        elif bp["knee_rate"] not in bp["offered_rates"]:
+            fail(path, "knee_rate not one of the swept offered rates")
+        else:
+            for p in pts:
+                if p["ttft_p99"] < p["ttft_p50"] or \
+                        p["tpot_p99"] < p["tpot_p50"]:
+                    fail(path, "latency percentiles out of order")
+                if not 0.0 <= p["shed_rate"] <= 1.0:
+                    fail(path, "shed_rate outside [0, 1]")
+            knee_i = bp["offered_rates"].index(bp["knee_rate"])
+            for a, b in zip(pts[knee_i:], pts[knee_i + 1:]):
+                if b["goodput_tokens_per_tick"] > \
+                        a["goodput_tokens_per_tick"] * 1.05:
+                    fail(path, "goodput rose past the knee (not saturated)")
+        bf = obj["breaking_point_faults"]
+        if bf["unresolved"] != 0:
+            fail(path, "fault schedule left unresolved requests")
+        if bf["parity"] is not True:
+            fail(path, "faulted streams diverged from fault-free engine")
+        if not bf["faults_injected"] == bf["faults_cleared"] == 3:
+            fail(path, "canonical schedule did not arm+clear all 3 faults")
+        if bf["pool_pages_leaked"] != 0:
+            fail(path, "fault run leaked pool pages")
 
 
 SPECIFIC = {

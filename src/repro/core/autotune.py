@@ -752,6 +752,43 @@ def choose_spec_k(lengths: Iterable[int], n_heads: int,
                         candidates=len(list(ks)))
 
 
+# -- serving overload pressure -------------------------------------------------
+
+DEGRADE_HIGH = 0.85   # default enter-degraded threshold (ServeConfig)
+DEGRADE_LOW = 0.60    # default leave-degraded threshold (hysteresis)
+
+
+def serve_pressure(pool_occupancy: float, queue_depth: int,
+                   batch: int) -> float:
+    """Scalar load-pressure signal in [0, 1] for the serving engine's
+    degradation ladder.
+
+    Two independent saturation signals, take the worse: the KV page
+    pool's occupancy fraction (pages in use / capacity — HBM pressure:
+    near 1.0 the next decode page comes from a preemption), and the
+    queue depth normalized by the decode batch (admission pressure: a
+    queue deeper than the batch means arrivals outrun service even if
+    every slot turned over each tick). ``max`` rather than a weighted
+    sum — either resource saturating alone is an overload, and a bounded
+    signal composes with fixed thresholds."""
+    q = min(1.0, float(queue_depth) / max(1.0, float(batch)))
+    return max(min(1.0, float(pool_occupancy)), q)
+
+
+def choose_degradation(pressure: float, degraded: bool,
+                       high: float = DEGRADE_HIGH,
+                       low: float = DEGRADE_LOW) -> bool:
+    """Hysteresis band for the load-shedding latch: enter degraded mode
+    at/above ``high``, leave at/below ``low``. The dead band between
+    them is what prevents flapping — a downshift frees resources (spec
+    width, prefill budget), which *reduces* pressure; a single threshold
+    would re-upshift immediately and oscillate every tick."""
+    assert 0.0 <= low <= high <= 1.0, (low, high)
+    if degraded:
+        return pressure > low
+    return pressure >= high
+
+
 def tp_decode_model(lengths: Iterable[int], n_heads: int,
                     n_kv_heads: int, head_dim: int, page_size: int,
                     param_bytes: float, d_model: int, n_layers: int,

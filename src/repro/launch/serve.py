@@ -9,6 +9,17 @@ tensor-parallel, KV page pool device-sharded — see serve/README.md):
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \\
       --paged --tp 8
+
+Open-loop traffic mode (--rate) replaces the batch submit with the
+seeded arrival generator, SLO-aware admission, and the operator report
+(TTFT/TPOT percentiles, goodput, shed rate); --faults adds the canonical
+fault schedule on top:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \\
+      --paged --rate 2.0 --process bursty --max-queue 8 \\
+      --max-preemptions 3 --degrade --tenant \\
+      "name=paid,priority=2,weight=1" --tenant \\
+      "name=free,weight=3,rate=2,burst=16,ttft=32"
 """
 
 from __future__ import annotations
@@ -22,7 +33,37 @@ import numpy as np
 from repro import configs
 from repro.launch import mesh as mesh_lib
 from repro.models import transformer as T
-from repro.serve.engine import Request, ServeConfig, ServingEngine
+from repro.serve import traffic
+from repro.serve.engine import Request, ServeConfig, ServingEngine, SLOClass
+from repro.serve.faults import FaultInjector, canonical_schedule
+
+
+def _parse_tenant(spec: str):
+    """``name=paid,priority=2,rate=1.5,burst=8,ttft=16,tpot=4,weight=1``
+    -> (SLOClass, TrafficClass) with unset fields at their defaults."""
+    kv = {}
+    for part in spec.split(","):
+        k, _, v = part.partition("=")
+        if not _ or not k:
+            raise SystemExit(f"--tenant wants k=v pairs, got {part!r}")
+        kv[k.strip()] = v.strip()
+    name = kv.pop("name", None)
+    if not name:
+        raise SystemExit(f"--tenant needs name=..., got {spec!r}")
+    num = lambda k, d=None: float(kv[k]) if k in kv else d  # noqa: E731
+    slo = SLOClass(name, priority=int(num("priority", 0)),
+                   ttft_slo=num("ttft"), tpot_slo=num("tpot"),
+                   rate=num("rate"), burst=num("burst"))
+    tcls = traffic.TrafficClass(
+        name, weight=num("weight", 1.0),
+        prompt_lo=int(num("prompt-lo", 4)),
+        prompt_hi=int(num("prompt-hi", 12)),
+        out_lo=int(num("out-lo", 2)), out_hi=int(num("out-hi", 8)))
+    known = {"priority", "ttft", "tpot", "rate", "burst", "weight",
+             "prompt-lo", "prompt-hi", "out-lo", "out-hi"}
+    if set(kv) - known:
+        raise SystemExit(f"--tenant unknown keys {sorted(set(kv) - known)}")
+    return slo, tcls
 
 
 def main(argv=None):
@@ -59,6 +100,49 @@ def main(argv=None):
     ap.add_argument("--mesh", default=None,
                     help="explicit serving mesh as AXIS=N (e.g. model=8); "
                          "alternative spelling of --tp")
+    traf = ap.add_argument_group(
+        "open-loop traffic / SLO admission",
+        "--rate switches from the batch submit to the seeded open-loop "
+        "generator (serve/traffic.py): requests arrive on a Poisson or "
+        "bursty (MMPP) clock, admission is SLO-aware, and the run ends "
+        "with the operator report.")
+    traf.add_argument("--rate", type=float, default=None,
+                      help="offered load in requests per engine tick "
+                           "(enables traffic mode)")
+    traf.add_argument("--process", choices=("poisson", "bursty"),
+                      default="poisson",
+                      help="arrival process; 'bursty' modulates the rate "
+                           "by --burst-factor in burst state")
+    traf.add_argument("--burst-factor", type=float, default=8.0,
+                      help="bursty-state rate multiplier (MMPP)")
+    traf.add_argument("--tenant", action="append", default=[],
+                      help="repeatable tenant class: 'name=paid,priority=2,"
+                           "rate=1.5,burst=8,ttft=16,tpot=4,weight=1,"
+                           "prompt-lo=4,prompt-hi=12,out-lo=2,out-hi=8'. "
+                           "priority orders admission and shedding; "
+                           "rate/burst meter a token bucket; ttft/tpot set "
+                           "the SLO targets the report scores")
+    traf.add_argument("--max-queue", type=int, default=None,
+                      help="bounded admission queue: overflow sheds the "
+                           "lowest-priority newest request (explicit "
+                           "rejected: outcome, never a silent drop)")
+    traf.add_argument("--max-preemptions", type=int, default=None,
+                      help="fairness cap: a request preempted this many "
+                           "times is force-completed or cleanly rejected "
+                           "instead of being evicted again")
+    traf.add_argument("--degrade", action="store_true",
+                      help="automatic load-shedding downshifts under "
+                           "pressure (spec off, prefill budget 1); "
+                           "stream-transparent, recovers on its own")
+    traf.add_argument("--spec-probe-every", type=int, default=None,
+                      help="after an accept-rate collapse disables "
+                           "speculation, run a k=1 trial tick this often "
+                           "so it can re-open (needs --spec-k and the "
+                           "adaptation clock)")
+    traf.add_argument("--faults", action="store_true",
+                      help="run the canonical seeded fault schedule (pool "
+                           "squeeze -> accept collapse -> churn storm) "
+                           "against the traffic")
     args = ap.parse_args(argv)
 
     if args.spec_k and not args.paged:
@@ -78,6 +162,10 @@ def main(argv=None):
     if mesh is not None and not args.paged:
         raise SystemExit("--tp/--mesh need --paged (the shard unit of the "
                          "distributed engine is the KV page)")
+    if args.rate is None and (args.tenant or args.faults):
+        raise SystemExit("--tenant/--faults need --rate (traffic mode)")
+    if args.spec_probe_every is not None and not args.spec_k:
+        raise SystemExit("--spec-probe-every needs --spec-k")
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
         else configs.get_config(args.arch)
@@ -90,26 +178,67 @@ def main(argv=None):
         # degrade to a tiny-but-usable pool, not an assert.
         n_pages = max(2, 1 + int(args.batch * args.max_len
                                  // args.page_size * args.pool_frac))
-    engine = ServingEngine(params, cfg,
-                           ServeConfig(max_len=args.max_len,
-                                       batch=args.batch, paged=args.paged,
-                                       page_size=args.page_size,
-                                       n_pages=n_pages,
-                                       chunk_size=args.chunk_size,
-                                       spec_k=args.spec_k,
-                                       draft=args.draft),
-                           mesh=mesh)
-    rng = np.random.RandomState(args.seed)
+    tenants = [_parse_tenant(s) for s in args.tenant]
+    scfg = ServeConfig(
+        max_len=args.max_len, batch=args.batch, paged=args.paged,
+        page_size=args.page_size, n_pages=n_pages,
+        chunk_size=args.chunk_size, spec_k=args.spec_k, draft=args.draft,
+        classes=tuple(slo for slo, _ in tenants) or None,
+        max_queue=args.max_queue, max_preemptions=args.max_preemptions,
+        degrade=args.degrade,
+        spec_adapt_every=(args.spec_probe_every
+                          if args.spec_probe_every else None),
+        spec_probe_every=args.spec_probe_every)
+    engine = ServingEngine(params, cfg, scfg, mesh=mesh)
     t0 = time.time()
-    for rid in range(args.requests):
-        prompt = rng.randint(2, cfg.vocab, size=rng.randint(4, 12))
-        engine.submit(Request(rid=rid, prompt=prompt.astype(np.int32),
-                              max_new=args.max_new))
-    finished = engine.run_until_drained()
-    dt = time.time() - t0
-    toks = sum(len(v) for v in finished.values())
-    print(f"served {len(finished)} requests, {toks} tokens "
-          f"in {dt:.2f}s ({toks/dt:.1f} tok/s)")
+    if args.rate is not None:
+        tcfg = traffic.TrafficConfig(
+            rate=args.rate, n_requests=args.requests, seed=args.seed,
+            process=args.process, burst_factor=args.burst_factor,
+            vocab=cfg.vocab, max_prompt=args.max_len - args.max_new,
+            classes=tuple(t for _, t in tenants) or
+            (traffic.TrafficClass("default", out_lo=2,
+                                  out_hi=max(2, args.max_new)),))
+        arrivals = traffic.TrafficGenerator(tcfg).arrivals()
+        inj = FaultInjector(canonical_schedule()) if args.faults else None
+        res = traffic.run_open_loop(engine, arrivals, injector=inj)
+        if inj is not None:
+            inj.finish(engine)
+        dt = time.time() - t0
+        s = traffic.summarize(engine, arrivals)
+        print(f"offered {s['offered']} requests at rate {args.rate} "
+              f"({args.process}): {s['done']} done, {s['forced']} forced, "
+              f"{s['rejected']} rejected, {len(res['unresolved'])} "
+              f"unresolved in {s['ticks']} ticks / {dt:.2f}s")
+        print(f"  ttft p50/p99 {s['ttft_p50']:.0f}/{s['ttft_p99']:.0f} "
+              f"ticks, tpot p50/p99 {s['tpot_p50']:.2f}/{s['tpot_p99']:.2f}"
+              f", goodput {s['goodput_tokens_per_tick']:.2f} tok/tick, "
+              f"shed {s['shed_rate']:.2f}")
+        print(f"  preemptions {s['preemptions']}, admission holds "
+              f"{s['admission_holds']}, downshifts {s['downshifts']} "
+              f"({s['degraded_ticks']} degraded ticks), spec probes "
+              f"{engine.spec_probes}")
+        if inj is not None:
+            print(f"  faults: {inj.injected} injected, {inj.cleared} "
+                  f"cleared, {engine.pool.pages_in_use if engine.pool else 0}"
+                  f" pages leaked")
+        for name, c in sorted(s["by_class"].items()):
+            slo = (f", ttft-slo {c['ttft_slo_attainment']:.0%}"
+                   if "ttft_slo_attainment" in c else "")
+            print(f"  class {name}: {c['done']}/{c['offered']} done, "
+                  f"shed {engine.shed_by_class.get(name, 0)}{slo}")
+        finished = engine.finished
+    else:
+        rng = np.random.RandomState(args.seed)
+        for rid in range(args.requests):
+            prompt = rng.randint(2, cfg.vocab, size=rng.randint(4, 12))
+            engine.submit(Request(rid=rid, prompt=prompt.astype(np.int32),
+                                  max_new=args.max_new))
+        finished = engine.run_until_drained()
+        dt = time.time() - t0
+        toks = sum(len(v) for v in finished.values())
+        print(f"served {len(finished)} requests, {toks} tokens "
+              f"in {dt:.2f}s ({toks/dt:.1f} tok/s)")
     if engine.pool is not None:
         occ = engine.pool.occupancy()
         mesh_note = (f" over {occ['n_devices']} devices"

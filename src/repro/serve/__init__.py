@@ -1,6 +1,11 @@
-from repro.serve.engine import (ServeConfig, ServingEngine, decode_step,  # noqa
-                                greedy_generate, make_serve_step, prefill)
+from repro.serve.engine import (Request, ServeConfig, ServingEngine,  # noqa
+                                SLOClass, decode_step, greedy_generate,
+                                make_serve_step, prefill)
+from repro.serve.faults import (Fault, FaultInjector,  # noqa
+                                canonical_schedule)
 from repro.serve.paged import (PageAllocator, PagePoolExhausted,  # noqa
                                pages_for)
 from repro.serve.spec import (ModelDraft, NgramDraft, ScriptedDraft,  # noqa
                               longest_accept, resolve_draft)
+from repro.serve.traffic import (TrafficClass, TrafficConfig,  # noqa
+                                 TrafficGenerator, run_open_loop, summarize)

@@ -73,6 +73,34 @@ from repro.serve import spec as spec_mod
 
 
 @dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """One multi-tenant request class and its service-level objectives.
+
+    ``priority`` orders both admission (higher classes admit first) and
+    preemption (lower classes are evicted first). The TTFT/TPOT targets
+    are accounting, not scheduling inputs — ``serve.traffic.summarize``
+    reports attainment against them. ``rate``/``burst`` parameterize the
+    class's admission token bucket (tokens per engine tick / bucket cap):
+    a class can never occupy more sustained token throughput than its
+    refill rate, so one tenant's burst cannot starve the others. A class
+    with ``rate=None`` admits unmetered (subject only to pool headroom).
+    """
+
+    name: str
+    priority: int = 0            # higher = more important
+    ttft_slo: Optional[int] = None     # target ticks to first token
+    tpot_slo: Optional[float] = None   # target ticks per output token
+    rate: Optional[float] = None       # admission bucket refill, tokens/tick
+    burst: Optional[float] = None      # bucket cap; None -> 8 * rate
+
+    @property
+    def bucket_cap(self) -> float:
+        if self.burst is not None:
+            return float(self.burst)
+        return 8.0 * float(self.rate or 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
 class ServeConfig:
     max_len: int
     batch: int
@@ -103,6 +131,38 @@ class ServeConfig:
     prefill_chunks_per_tick: Optional[int] = None  # per-tick prefill
     # chunk budget; None runs one chunk for *every* mid-prefill slot.
     # With a budget, the shortest-remaining-first order decides who runs.
+    # -- overload robustness (all default-off: legacy behavior unchanged) --
+    classes: Optional[Tuple[SLOClass, ...]] = None  # multi-tenant request
+    # classes: admission runs highest-priority-first with per-class
+    # token-bucket metering; requests name their class via
+    # ``Request.rclass`` (unknown names fall back to priority 0,
+    # unmetered).
+    max_queue: Optional[int] = None  # bounded queue: beyond this depth
+    # the lowest-priority newest queued request is *shed* (cleanly
+    # rejected, counted in ``engine.shed_by_class``/``rejected``) instead
+    # of queueing unboundedly.
+    max_preemptions: Optional[int] = None  # per-request preemption cap:
+    # a request evicted this many times is next force-completed (partial
+    # stream kept) or cleanly rejected instead of re-queued — bounds
+    # preemption livelock. Also switches lone-slot pool exhaustion from
+    # raising PagePoolExhausted to self-preemption (graceful ladder).
+    preempt_cooldown: int = 2    # storm guard: a re-admitted slot is not
+    # chosen as a preemption victim again for this many ticks while any
+    # other victim exists (prevents admit/evict livelock under churn).
+    degrade: bool = False        # automatic load-shedding downshifts:
+    # under pressure (pool occupancy / queue depth, hysteresis via
+    # ``core.autotune.choose_degradation``) the engine disables
+    # speculation and tightens the prefill chunk budget for the tick,
+    # recovering when pressure clears. Emitted tokens are unchanged —
+    # every downshifted mode is bit-identical on the tokens it emits.
+    pressure_high: float = 0.85  # enter degraded mode at/above this
+    pressure_low: float = 0.60   # leave degraded mode at/below this
+    spec_probe_every: Optional[int] = None  # adaptive spec-k probing:
+    # while ``k_live == 0`` (the disable regime), run a k=1 trial verify
+    # tick every N plain ticks; trial accept stats feed the normal
+    # adaptation window, so speculation *recovers* when a collapsed
+    # accept rate clears (requires spec_adapt_every). None keeps the
+    # disable regime terminal (legacy).
 
 
 def prefill(params, cfg: T.ModelConfig, tokens, caches,
@@ -178,6 +238,10 @@ class Request:
     max_new: int
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    rclass: str = "default"      # SLO class name (ServeConfig.classes)
+    preempt_count: int = 0       # times evicted back to the queue
+    readmitted_at: Optional[int] = None  # tick of last re-admission
+    # (preemption-storm guard input; None until first preemption)
 
 
 class ServingEngine:
@@ -283,6 +347,36 @@ class ServingEngine:
         self._prefill_wait: Dict[int, int] = {} # slot -> ticks since served
         self._slot_seq: Dict[int, int] = {}     # slot -> admission sequence
         self._admit_seq = 0
+        # -- overload-robustness accounting -----------------------------------
+        self.submit_tick: Dict[int, int] = {}   # rid -> tick of submit()
+        self.finish_tick: Dict[int, int] = {}   # rid -> tick of last token
+        self.rejected: Dict[int, str] = {}      # rid -> shed/reject reason
+        self.outcome: Dict[int, str] = {}       # rid -> done|forced:*|rejected:*
+        self.shed_by_class: Dict[str, int] = {} # clean rejects per class
+        self.preemption_log: List[Tuple[int, str, int]] = []  # (rid,
+        # class, tokens generated at eviction) — fairness accounting
+        self._arrival_seq: Dict[int, int] = {}  # rid -> submit order
+        self._n_arrivals = 0
+        self._classes: Dict[str, SLOClass] = {
+            c.name: c for c in (serve_cfg.classes or ())}
+        assert len(self._classes) == len(serve_cfg.classes or ()), \
+            "duplicate SLO class names"
+        for c in self._classes.values():
+            assert c.rate is None or c.rate > 0, (c.name, c.rate)
+        self._buckets: Dict[str, float] = {
+            c.name: c.bucket_cap for c in self._classes.values()
+            if c.rate is not None}
+        if serve_cfg.max_queue is not None:
+            assert serve_cfg.max_queue >= 1, serve_cfg.max_queue
+        if serve_cfg.max_preemptions is not None:
+            assert serve_cfg.max_preemptions >= 0, serve_cfg.max_preemptions
+        assert serve_cfg.preempt_cooldown >= 0
+        self.degraded = False           # load-shedding downshift latch
+        self.degraded_ticks = 0         # ticks spent degraded
+        self.downshifts = 0             # clean->degraded transitions
+        self.last_pressure = 0.0
+        self.spec_probes = 0            # k=1 trial ticks while disabled
+        self._probe_wait = 0
         self.spec_k = serve_cfg.spec_k
         self.k_live = self.spec_k     # adaptive draft width (<= spec_k)
         self._adapt_ticks = 0         # verify ticks since last re-choice
@@ -297,6 +391,11 @@ class ServingEngine:
             self._verify_fn = self._make_verify_fn()
         if serve_cfg.spec_adapt_every is not None:
             assert serve_cfg.spec_adapt_every >= 1 and self.spec_k
+        if serve_cfg.spec_probe_every is not None:
+            # Probing needs the adaptation clock: trial-tick accept stats
+            # recover k_live through the same rechoose_k window.
+            assert serve_cfg.spec_probe_every >= 1 and self.spec_k \
+                and serve_cfg.spec_adapt_every is not None
         if serve_cfg.prefill_chunks_per_tick is not None:
             assert serve_cfg.prefill_chunks_per_tick >= 1, \
                 serve_cfg.prefill_chunks_per_tick
@@ -530,9 +629,13 @@ class ServingEngine:
     def _ensure_decode_pages(self) -> None:
         """Lazily grow each decode-active slot's table so the next decode
         token's write position is backed by a real page (admission only
-        reserved the first chunk's pages). A short pool preempts the
-        youngest other slot (``_preempt_for``); only a pool with nothing
-        left to preempt raises ``PagePoolExhausted``."""
+        reserved the first chunk's pages). A short pool preempts another
+        slot in ``_choose_victim`` order; a pool with nothing left to
+        preempt raises ``PagePoolExhausted`` — unless
+        ``ServeConfig.max_preemptions`` is set, in which case the lone
+        slot *self-preempts* (graceful ladder: its partial stream
+        requeues, or force-completes at the cap) instead of crashing the
+        engine."""
         if self.pool is None:
             return
         for i, slot in enumerate(self.slots):
@@ -541,6 +644,9 @@ class ServingEngine:
             target = self._pages_through_tick(slot)
             while len(self.pool.slot_pages.get(i, ())) < target:
                 if not self._preempt_for(1, protect={i}):
+                    if self.scfg.max_preemptions is not None:
+                        self._preempt(i)
+                        break
                     raise paged_mod.PagePoolExhausted(
                         f"slot {i} needs a decode page and no other slot "
                         f"is left to preempt; raise n_pages")
@@ -548,11 +654,56 @@ class ServingEngine:
 
     # -- preemption -----------------------------------------------------------
 
+    def _class_priority(self, req: Request) -> int:
+        cls = self._classes.get(req.rclass)
+        return cls.priority if cls is not None else 0
+
+    def _choose_victim(self, victims: List[int]) -> int:
+        """Priority + cost preemption policy (replaces youngest-slot):
+
+        * lowest-class-priority slots are evicted first (protect
+          high-class tenants),
+        * within a class, the slot with the least completion progress
+          loses (protect near-done streams — their sunk prefill+decode
+          work is the most expensive to re-pay),
+        * ties break youngest-admitted (least total sunk work).
+
+        Two guards rank *above* everything else in the victim score, so
+        they always yield when no alternative exists (a preemption that
+        must happen always can) and never force a worse class out to
+        satisfy a softer guard:
+
+        * **cap guard** (strongest) — a slot whose request already hit
+          ``max_preemptions`` ranks last: preempting it again would
+          force-terminate it, so any victim that can still requeue is
+          preferred — across class lines.
+        * **storm guard** — a slot re-admitted within the last
+          ``preempt_cooldown`` ticks ranks behind its class peers, so an
+          admit/evict/admit livelock can't spin on one request. Unlike
+          the cap guard it yields to class protection: a cooling
+          low-class slot is still evicted before a fresh high-class one
+          (cooling costs a re-prefill; terminating a paying tenant's
+          stream costs the SLO).
+        """
+        lim = self.scfg.max_preemptions
+        cool = self.scfg.preempt_cooldown
+
+        def score(i):
+            req = self.slots[i]
+            ra = req.readmitted_at
+            cooling = ra is not None and self.ticks - ra < cool
+            capped = lim is not None and req.preempt_count >= lim
+            done = len(req.generated) / max(1, req.max_new)
+            return (capped, self._class_priority(req), cooling, done,
+                    -self._slot_seq[i])
+
+        return min(victims, key=score)
+
     def _preempt_for(self, need: int, protect: set) -> bool:
-        """Free pages until ``need`` are available by preempting the
-        youngest (latest-admitted) slots outside ``protect``. Returns
-        False when no victim is left (the caller decides whether that is
-        a stall or a crash)."""
+        """Free pages until ``need`` are available by preempting slots
+        outside ``protect`` in ``_choose_victim`` order. Returns False
+        when no victim is left (the caller decides whether that is a
+        stall, a self-preemption, or a crash)."""
         if self.pool is None:
             return False
         while not self.pool.can_alloc(need):
@@ -560,16 +711,37 @@ class ServingEngine:
                        if s is not None and i not in protect]
             if not victims:
                 return False
-            self._preempt(max(victims, key=lambda i: self._slot_seq[i]))
+            self._preempt(self._choose_victim(victims))
         return True
 
+    def _finish_forced(self, req: Request, reason: str) -> None:
+        """Terminal: keep the partial stream (a bit-identical *prefix* of
+        the uncontended stream — per-(rid, position) sampling keys make
+        every emitted token exact) and leave the system."""
+        req.done = True
+        self.finished[req.rid] = req.generated
+        self.finish_tick[req.rid] = self.ticks
+        self.outcome[req.rid] = f"forced:{reason}"
+
+    def _reject(self, req: Request, reason: str) -> None:
+        """Terminal: clean reject with explicit accounting — the request
+        emitted nothing and is reported shed, never silently dropped."""
+        req.done = True
+        self.rejected[req.rid] = reason
+        self.outcome[req.rid] = f"rejected:{reason}"
+        self.shed_by_class[req.rclass] = \
+            self.shed_by_class.get(req.rclass, 0) + 1
+
     def _preempt(self, i: int) -> None:
-        """Evict slot ``i`` back to the head of the queue: its pages
-        return to the pool and its generated tokens are preserved — on
-        re-admission they prefill as prompt context and generation
-        continues where it stopped."""
+        """Evict slot ``i``: its pages return to the pool and its
+        generated tokens are preserved — on re-admission they prefill as
+        prompt context and generation continues where it stopped
+        (requeued at the head). A request already at
+        ``ServeConfig.max_preemptions`` is not preempted again: it
+        force-completes with its partial stream (or cleanly rejects when
+        it never emitted), so no request can livelock through the
+        evict/re-admit cycle and ``preempt_count`` is bounded by the cap."""
         req = self.slots[i]
-        self.preemptions += 1
         self.free_slot(i)
         self.last_tok = self.last_tok.at[i].set(0)
         if len(req.prompt) + len(req.generated) >= self.scfg.max_len:
@@ -577,15 +749,97 @@ class ServingEngine:
             # remains (the contiguous engine would be spilling writes too),
             # so finish with what it generated instead of requeueing an
             # unservable request.
-            req.done = True
-            self.finished[req.rid] = req.generated
+            self._finish_forced(req, "max_len")
             return
+        lim = self.scfg.max_preemptions
+        if lim is not None and req.preempt_count >= lim:
+            if req.generated:
+                self._finish_forced(req, "preempt_limit")
+            else:
+                self._reject(req, "preempt_limit")
+            return
+        self.preemptions += 1
+        req.preempt_count += 1
+        self.preemption_log.append((req.rid, req.rclass,
+                                    len(req.generated)))
         self.queue.insert(0, req)
 
     # -- request lifecycle ----------------------------------------------------
 
     def submit(self, req: Request):
+        self.submit_tick.setdefault(req.rid, self.ticks)
+        self._arrival_seq.setdefault(req.rid, self._n_arrivals)
+        self._n_arrivals += 1
         self.queue.append(req)
+        mq = self.scfg.max_queue
+        if mq is None or len(self.queue) <= mq:
+            return
+        # Bounded queue: shed the lowest-priority *newest* fresh request
+        # (never a preempted one — its generated tokens must survive to a
+        # terminal outcome) with explicit accounting. The just-submitted
+        # request is always a candidate, so the bound always holds.
+        cands = [r for r in self.queue if not r.preempt_count]
+        victim = min(cands, key=lambda r: (
+            self._class_priority(r), -self._arrival_seq[r.rid]))
+        self.queue.remove(victim)
+        self._reject(victim, "queue_full")
+
+    # -- SLO-aware admission --------------------------------------------------
+
+    def _refill_buckets(self) -> None:
+        """One tick's refill for every metered class (tokens/tick,
+        capped at the class's burst)."""
+        for name, cls in self._classes.items():
+            if cls.rate is None:
+                continue
+            self._buckets[name] = min(cls.bucket_cap,
+                                      self._buckets[name] + cls.rate)
+
+    def _bucket_ok(self, req: Request) -> bool:
+        """Debit-style token bucket: a class may admit whenever its
+        bucket is non-negative; the admitted request's full token cost
+        then debits it (possibly below zero), so an oversized request is
+        admitted once and paid off by refills rather than blocked
+        forever. Re-admissions after preemption were charged at first
+        admission and pass free."""
+        cls = self._classes.get(req.rclass)
+        if cls is None or cls.rate is None or req.preempt_count:
+            return True
+        return self._buckets[req.rclass] >= 0.0
+
+    def _charge_bucket(self, req: Request) -> None:
+        cls = self._classes.get(req.rclass)
+        if cls is None or cls.rate is None or req.preempt_count:
+            return
+        self._buckets[req.rclass] -= \
+            self._effective_len(req) + req.max_new
+
+    def _admission_order(self) -> List[int]:
+        """Queue indices in admission order. Legacy (no classes): FIFO.
+        With classes: preempted re-admissions first (their sunk
+        prefill+decode work is the most expensive to lose, and the
+        requeue-at-head contract bounds their re-admission latency),
+        then class priority descending, then arrival order."""
+        if not self._classes:
+            return list(range(len(self.queue)))
+
+        def key(qi):
+            r = self.queue[qi]
+            return (0 if r.preempt_count else 1,
+                    -self._class_priority(r),
+                    self._arrival_seq.get(r.rid, qi), qi)
+
+        return sorted(range(len(self.queue)), key=key)
+
+    def _next_admission(self) -> Optional[int]:
+        """First queue index in admission order whose class bucket
+        admits; None when every queued request is bucket-throttled
+        (they wait for refills — a metered class never blocks another
+        class's admission)."""
+        for qi in self._admission_order():
+            if self._bucket_ok(self.queue[qi]):
+                return qi
+        return None
 
     def _effective_prompt(self, req: Request) -> np.ndarray:
         """The rows a (re-)admission must prefill: the original prompt
@@ -640,6 +894,8 @@ class ServingEngine:
         if tok == self.scfg.eos_id or len(req.generated) >= req.max_new:
             req.done = True
             self.finished[req.rid] = req.generated
+            self.finish_tick[req.rid] = self.ticks
+            self.outcome[req.rid] = "done"
             self.free_slot(i)
             return True
         return False
@@ -690,17 +946,23 @@ class ServingEngine:
         return total
 
     def _admit(self):
+        self._refill_buckets()
         for i, slot in enumerate(self.slots):
-            if slot is None and self.queue:
-                req = self.queue[0]
+            if slot is not None:
+                continue
+            while self.queue:
+                qi = self._next_admission()
+                if qi is None:
+                    return            # all queued classes bucket-throttled
+                req = self.queue[qi]
                 if self.pool is not None:
                     # Chunked admission needs only the length (tokens are
                     # materialized chunk-by-chunk in _prefill_tick) and
                     # reserves only the *first chunk's* pages; a short
                     # pool rejects cleanly — the request stays queued
-                    # (FIFO: later requests wait too) and retries next
-                    # tick, after finished slots return pages. The
-                    # headroom check also covers the imminent growth of
+                    # (later requests wait too) and retries next tick,
+                    # after finished slots return pages. The headroom
+                    # check also covers the imminent growth of
                     # already-committed slots.
                     ps = self.scfg.page_size
                     plen = self._effective_len(req)
@@ -709,11 +971,20 @@ class ServingEngine:
                     # A request over the pool's *capacity* (whole prompt +
                     # its first decode write, speculative width included)
                     # can never finish even with every other slot
-                    # preempted, so fail loudly instead of holding it
-                    # forever.
+                    # preempted. Legacy: fail loudly instead of holding it
+                    # forever. Graceful mode (max_preemptions set): give
+                    # it a terminal outcome — force-complete a partial
+                    # stream, cleanly reject a fresh one — and move on.
                     with_decode = paged_mod.pages_for(
                         min(plen + 1 + self.spec_k, self.scfg.max_len), ps)
                     if with_decode > self.pool.capacity:
+                        if self.scfg.max_preemptions is not None:
+                            self.queue.pop(qi)
+                            if req.generated:
+                                self._finish_forced(req, "capacity")
+                            else:
+                                self._reject(req, "capacity")
+                            continue   # retry this slot with the next
                         raise paged_mod.PagePoolExhausted(
                             f"request {req.rid}: needs {with_decode} pages "
                             f"but the pool holds {self.pool.capacity}; "
@@ -723,19 +994,23 @@ class ServingEngine:
                     if not self.pool.can_alloc(
                             first + self._imminent_page_need()):
                         self.admission_rejections += 1
-                        break
-                    self.queue.pop(0)
+                        return        # hold: everyone waits for pages
+                    self.queue.pop(qi)
+                    self._charge_bucket(req)
                     self.slots[i] = req
+                    if req.preempt_count:
+                        req.readmitted_at = self.ticks   # storm guard
                     self._prefilling[i] = 0
                     self._slot_seq[i] = self._admit_seq
                     self._admit_seq += 1
                     self._append_pages(i, self.pool.alloc(i, first))
-                    continue          # chunks run in _prefill_tick
+                    break             # chunks run in _prefill_tick
                 prompt = self._effective_prompt(req)
                 bucket = self.bucket_for(len(prompt))
                 assert len(prompt) <= bucket <= self.scfg.max_len, \
                     (len(prompt), bucket, self.scfg.max_len)
-                self.queue.pop(0)
+                self.queue.pop(qi)
+                self._charge_bucket(req)
                 padded = np.zeros((1, bucket), np.int32)
                 padded[0, :len(prompt)] = prompt
                 tok, self.caches = self._prefill_fn(bucket)(
@@ -748,6 +1023,7 @@ class ServingEngine:
                 tok = int(np.asarray(tok))
                 if not self._record(i, req, tok):
                     self.last_tok = self.last_tok.at[i].set(tok)
+                break
 
     def _prefill_order(self) -> List[int]:
         """Mid-prefill slots in shortest-remaining-first order with aging
@@ -782,6 +1058,11 @@ class ServingEngine:
         pages)."""
         ps, max_len = self.scfg.page_size, self.scfg.max_len
         budget = self.scfg.prefill_chunks_per_tick
+        if self.degraded:
+            # Downshift: one chunk per tick keeps admission live while
+            # decode (the SLO-bearing work) gets the tick back. Prompt
+            # *content* is untouched — only when it finishes prefilling.
+            budget = 1 if budget is None else min(1, budget)
         served = 0
         for i in self._prefill_order():
             if budget is not None and served >= budget:
@@ -827,11 +1108,63 @@ class ServingEngine:
             if not self._record(i, req, tok):
                 self.last_tok = self.last_tok.at[i].set(tok)
 
+    def _update_pressure(self) -> None:
+        """Load-shedding downshift latch (``ServeConfig.degrade``): the
+        pressure signal (pool occupancy vs queue depth,
+        ``core.autotune.serve_pressure``) drives a hysteresis band
+        (``choose_degradation``) — at/above ``pressure_high`` the engine
+        enters degraded mode (speculation off, prefill chunk budget
+        tightened to 1), and it stays degraded until pressure falls
+        to/below ``pressure_low``. Both downshifts are stream-transparent
+        (spec == plain is bit-identical; the chunk budget only re-orders
+        *when* prompts finish prefilling), so degraded ticks emit exactly
+        the tokens clean ticks would."""
+        if not self.scfg.degrade:
+            return
+        from repro.core import autotune
+        occ = (self.pool.pages_in_use / max(1, self.pool.capacity)
+               if self.pool is not None else
+               sum(s is not None for s in self.slots) / self.scfg.batch)
+        self.last_pressure = autotune.serve_pressure(
+            occ, len(self.queue), self.scfg.batch)
+        was = self.degraded
+        self.degraded = autotune.choose_degradation(
+            self.last_pressure, was,
+            self.scfg.pressure_high, self.scfg.pressure_low)
+        if self.degraded:
+            self.degraded_ticks += 1
+            if not was:
+                self.downshifts += 1
+
+    def _spec_width(self) -> int:
+        """Draft width for this tick. ``k_live`` normally; 0 while the
+        degradation ladder has speculation shed; and — the probe clock —
+        a single k=1 trial every ``spec_probe_every`` plain ticks while
+        the adaptive disable regime (``k_live == 0``) holds. The trial
+        tick's accept stats feed the same ``_maybe_adapt_k`` window as
+        normal verify ticks, so a recovered accept rate re-opens
+        speculation instead of the disable regime being terminal."""
+        if not self.spec_k:
+            return 0
+        if self.degraded:
+            return 0
+        if self.k_live:
+            return self.k_live
+        if self.scfg.spec_probe_every is None:
+            return 0
+        self._probe_wait += 1
+        if self._probe_wait < self.scfg.spec_probe_every:
+            return 0
+        self._probe_wait = 0
+        self.spec_probes += 1
+        return 1
+
     def tick(self) -> int:
         """Admit, advance prefill chunks, one decode step — or one
         speculative draft/verify step (``spec_k > 0``) — for all
         decode-active slots; returns #slots making progress."""
         self.ticks += 1
+        self._update_pressure()
         self._admit()
         self._prefill_tick()
         self._ensure_decode_pages()
@@ -840,8 +1173,9 @@ class ServingEngine:
         if not active:
             return len(self._prefilling)
         n = len(active) + len(self._prefilling)
-        if self.spec_k and self.k_live:
-            self._spec_tick(active)
+        k = self._spec_width()
+        if k:
+            self._spec_tick(active, k)
             self._maybe_adapt_k()
         else:
             self._decode_tick(active)
@@ -854,10 +1188,12 @@ class ServingEngine:
         width from the window's measured accept rate
         (``serve.spec.rechoose_k`` -> ``core.autotune.choose_spec_k``).
         A collapsing accept rate prices speculation below plain decode
-        and drives ``k_live`` to 0 — the disable regime, terminal for
-        this engine: the workload has shown drafts don't land, so the
-        verify width is pure overhead from here on. The verify
-        executable (width spec_k + 1) stays traced either way."""
+        and drives ``k_live`` to 0 — the disable regime: the workload
+        has shown drafts don't land, so the verify width is pure
+        overhead. Terminal by default; with ``spec_probe_every`` set,
+        periodic k=1 trial ticks (``_spec_width``) keep feeding this
+        window so a recovered accept rate re-opens speculation. The
+        verify executable (width spec_k + 1) stays traced either way."""
         every = self.scfg.spec_adapt_every
         if every is None:
             return
@@ -889,7 +1225,8 @@ class ServingEngine:
             nxt_host[i] = 0
         self.last_tok = jnp.asarray(nxt_host, jnp.int32)
 
-    def _spec_tick(self, active: List[int]) -> None:
+    def _spec_tick(self, active: List[int],
+                   k: Optional[int] = None) -> None:
         """One draft/verify step (``serve.spec``): up to ``spec_k``
         drafted tokens per active slot are scored together with the
         pending token in the single verify executable, and the longest
@@ -907,7 +1244,8 @@ class ServingEngine:
         in the null page (positions past the table's reach). Slot state
         after the tick is therefore bit-identical to a plain engine that
         emitted the same tokens."""
-        k, width = self.k_live, self.spec_k + 1
+        k = self.k_live if k is None else k
+        width = self.spec_k + 1
         tokens = np.zeros((self.scfg.batch, width), np.int32)
         tokens[:, 0] = np.asarray(self.last_tok)
         base_len: Dict[int, int] = {}

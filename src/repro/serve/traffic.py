@@ -1,0 +1,283 @@
+"""Open-loop traffic generation and SLO accounting for the serving engine.
+
+Every benchmark before this module replayed a fixed request list — a
+*closed loop*: the generator waits for the engine, so the engine can
+never be overrun and its failure paths never fire. Production load is
+open-loop: arrivals come on their own clock whether or not the server
+keeps up, and the interesting regime is exactly the one closed-loop
+replay can't reach — offered load past capacity, where queues grow,
+admission sheds, and preemption churns. (Same method as the source
+paper's microbenchmarks: drive the system past its comfortable point
+and characterize *how* it breaks, not whether it works when idle.)
+
+Everything here is deterministic from ``TrafficConfig.seed`` — arrivals,
+prompt content, length mixes, class labels all come from one
+``np.random.Generator``, so a traffic trace is reproducible bit-for-bit
+and the breaking-point bench cells commit stable numbers.
+
+Pieces:
+
+  * ``TrafficClass`` — one tenant class's mix weight, length
+    distributions, and the name of its engine-side ``SLOClass``.
+  * ``TrafficGenerator`` — seeded arrival-time + request synthesis.
+    ``process="poisson"`` draws i.i.d. exponential gaps at ``rate``
+    requests/tick; ``process="bursty"`` is a 2-state Markov-modulated
+    Poisson process (calm/burst states with different rates and seeded
+    state flips) — the arrival shape that actually trips admission
+    control, because a burst arrives faster than any steady rate.
+  * ``run_open_loop`` — the open-loop driver: submit every request whose
+    arrival time has passed, then tick once, repeat; the engine never
+    gates the generator.
+  * ``summarize`` — the operator-facing rollup: TTFT/TPOT percentiles
+    (tick domain), goodput, shed/preemption accounting, per-class SLO
+    attainment.
+
+Times are in *engine ticks*, not wall-clock: a tick is the engine's unit
+of service (one decode step for every active slot), so tick-domain
+latencies are deterministic, hardware-independent, and directly
+convertible (multiply by the measured tick time) — which is what lets
+the committed bench cells be schema-gated with hard inequalities.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve import engine as engine_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficClass:
+    """One tenant class's share of the offered load.
+
+    ``name`` should match an engine-side ``SLOClass`` name when the
+    engine runs with admission classes (unknown names serve unmetered at
+    priority 0 — the engine's explicit fallback). Lengths are drawn
+    log-uniform in [lo, hi]: production prompt lengths are heavy-tailed,
+    and a log draw exercises every bucket/chunk regime instead of
+    clustering at the mean."""
+
+    name: str
+    weight: float = 1.0               # mix share (normalized over classes)
+    prompt_lo: int = 8
+    prompt_hi: int = 64
+    out_lo: int = 4
+    out_hi: int = 32
+
+    def __post_init__(self):
+        assert self.weight > 0, self.weight
+        assert 1 <= self.prompt_lo <= self.prompt_hi
+        assert 1 <= self.out_lo <= self.out_hi
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficConfig:
+    """Seeded open-loop arrival process.
+
+    ``rate`` is offered load in requests per engine tick. The bursty
+    process alternates calm (``rate``) and burst (``rate * burst_factor``)
+    states; state flips are Bernoulli per arrival with the given exit
+    probabilities, giving geometric dwell times — the standard 2-state
+    MMPP shape."""
+
+    rate: float                       # mean arrivals per tick (calm state)
+    n_requests: int                   # total requests to offer
+    seed: int = 0
+    process: str = "poisson"          # "poisson" | "bursty"
+    burst_factor: float = 8.0         # burst-state rate multiplier
+    p_enter_burst: float = 0.05       # calm -> burst flip per arrival
+    p_exit_burst: float = 0.25        # burst -> calm flip per arrival
+    classes: Tuple[TrafficClass, ...] = (TrafficClass("default"),)
+    vocab: int = 128                  # prompt token id range [2, vocab)
+    max_prompt: Optional[int] = None  # clamp (engine max_len guard)
+
+    def __post_init__(self):
+        assert self.rate > 0, self.rate
+        assert self.n_requests >= 1
+        assert self.process in ("poisson", "bursty"), self.process
+        assert self.burst_factor >= 1.0
+        assert 0.0 < self.p_enter_burst < 1.0
+        assert 0.0 < self.p_exit_burst <= 1.0
+        assert self.classes
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One offered request: what to submit and when."""
+
+    tick: int                         # arrival time (engine ticks)
+    rid: int
+    rclass: str
+    prompt: np.ndarray
+    max_new: int
+
+
+class TrafficGenerator:
+    """Deterministic open-loop arrival synthesis (one RNG, one seed)."""
+
+    def __init__(self, cfg: TrafficConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+
+    def _log_uniform(self, lo: int, hi: int) -> int:
+        if lo == hi:
+            return lo
+        return int(round(np.exp(self.rng.uniform(np.log(lo), np.log(hi)))))
+
+    def arrivals(self, rid0: int = 0) -> List[Arrival]:
+        """The full offered trace, arrival-time sorted."""
+        cfg = self.cfg
+        names = [c.name for c in cfg.classes]
+        weights = np.asarray([c.weight for c in cfg.classes], np.float64)
+        weights = weights / weights.sum()
+        by_name = {c.name: c for c in cfg.classes}
+        out: List[Arrival] = []
+        t = 0.0
+        burst = False
+        for n in range(cfg.n_requests):
+            rate = cfg.rate
+            if cfg.process == "bursty":
+                # Geometric dwell: flip with the state's exit probability
+                # before each gap, then draw the gap at the state's rate.
+                p = cfg.p_exit_burst if burst else cfg.p_enter_burst
+                if self.rng.random() < p:
+                    burst = not burst
+                if burst:
+                    rate = cfg.rate * cfg.burst_factor
+            t += self.rng.exponential(1.0 / rate)
+            cls = by_name[str(self.rng.choice(names, p=weights))]
+            plen = self._log_uniform(cls.prompt_lo, cls.prompt_hi)
+            if cfg.max_prompt is not None:
+                plen = min(plen, cfg.max_prompt)
+            prompt = self.rng.integers(2, cfg.vocab, size=(plen,),
+                                       dtype=np.int64).astype(np.int32)
+            out.append(Arrival(
+                tick=int(t), rid=rid0 + n, rclass=cls.name, prompt=prompt,
+                max_new=self._log_uniform(cls.out_lo, cls.out_hi)))
+        return out
+
+
+def run_open_loop(engine, arrivals: List[Arrival],
+                  max_ticks: int = 20000,
+                  injector=None) -> Dict[str, dict]:
+    """Drive ``engine`` open-loop: each iteration submits every arrival
+    whose time has passed (the generator's clock, not the engine's
+    readiness), then ticks once. Runs until every offered request has a
+    terminal outcome (finished or rejected) or ``max_ticks`` elapses —
+    the caller asserts on the shortfall, because a request with no
+    outcome after the drain window IS the hang the robustness invariant
+    forbids. ``injector`` (``serve.faults.FaultInjector``) is stepped
+    before each tick so fault schedules share the tick clock."""
+    pending = sorted(arrivals, key=lambda a: (a.tick, a.rid))
+    offered = {a.rid for a in pending}
+    j = 0
+    for _ in range(max_ticks):
+        while j < len(pending) and pending[j].tick <= engine.ticks:
+            a = pending[j]
+            engine.submit(engine_mod.Request(
+                rid=a.rid, prompt=a.prompt, max_new=a.max_new,
+                rclass=a.rclass))
+            j += 1
+        if injector is not None:
+            injector.step(engine)
+        engine.tick()
+        if j == len(pending):
+            done = all(r in engine.finished or r in engine.rejected
+                       for r in offered)
+            if done and not engine.queue and \
+                    all(s is None for s in engine.slots):
+                break
+    return {
+        "finished": dict(engine.finished),
+        "rejected": dict(engine.rejected),
+        "unresolved": sorted(
+            r for r in offered
+            if r not in engine.finished and r not in engine.rejected),
+    }
+
+
+def _pct(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q)) \
+        if xs else float("nan")
+
+
+def summarize(engine, arrivals: List[Arrival]) -> Dict[str, object]:
+    """The operator-facing rollup, all in the tick domain.
+
+    * TTFT: first-token tick minus submit tick (queueing + prefill).
+    * TPOT: inter-token interval over the decode phase,
+      (finish - first) / (n_tokens - 1), per request with >= 2 tokens.
+    * goodput: completed tokens per elapsed tick — tokens of *finished*
+      requests only, so shed/preempted-to-death work doesn't count.
+    * per class: the same plus SLO attainment against the engine's
+      ``SLOClass`` targets when they are set.
+    """
+    by_class: Dict[str, List[Arrival]] = {}
+    for a in arrivals:
+        by_class.setdefault(a.rclass, []).append(a)
+    elapsed = max(1, engine.ticks)
+    done_tokens = sum(len(v) for r, v in engine.finished.items()
+                      if engine.outcome.get(r) == "done")
+    all_tokens = sum(len(v) for v in engine.finished.values())
+
+    def roll(arrs: List[Arrival]) -> Dict[str, object]:
+        ttfts, tpots = [], []
+        n_done = n_forced = n_rejected = 0
+        ttft_ok = tpot_ok = ttft_n = tpot_n = 0
+        for a in arrs:
+            cls = engine._classes.get(a.rclass)
+            out = engine.outcome.get(a.rid, "")
+            if out == "done":
+                n_done += 1
+            elif out.startswith("forced"):
+                n_forced += 1
+            elif out.startswith("rejected"):
+                n_rejected += 1
+            ft = engine.first_token_tick.get(a.rid)
+            sub = engine.submit_tick.get(a.rid)
+            if ft is not None and sub is not None:
+                ttft = ft - sub
+                ttfts.append(ttft)
+                if cls is not None and cls.ttft_slo is not None:
+                    ttft_n += 1
+                    ttft_ok += ttft <= cls.ttft_slo
+            fin = engine.finish_tick.get(a.rid)
+            n_tok = len(engine.finished.get(a.rid, ()))
+            if ft is not None and fin is not None and n_tok >= 2:
+                tpot = (fin - ft) / (n_tok - 1)
+                tpots.append(tpot)
+                if cls is not None and cls.tpot_slo is not None:
+                    tpot_n += 1
+                    tpot_ok += tpot <= cls.tpot_slo
+        out = {
+            "offered": len(arrs),
+            "done": n_done,
+            "forced": n_forced,
+            "rejected": n_rejected,
+            "ttft_p50": _pct(ttfts, 50), "ttft_p99": _pct(ttfts, 99),
+            "tpot_p50": _pct(tpots, 50), "tpot_p99": _pct(tpots, 99),
+        }
+        if ttft_n:
+            out["ttft_slo_attainment"] = ttft_ok / ttft_n
+        if tpot_n:
+            out["tpot_slo_attainment"] = tpot_ok / tpot_n
+        return out
+
+    summary: Dict[str, object] = roll(arrivals)
+    summary.update({
+        "ticks": engine.ticks,
+        "goodput_tokens_per_tick": done_tokens / elapsed,
+        "total_tokens_per_tick": all_tokens / elapsed,
+        "shed_rate": sum(engine.shed_by_class.values())
+        / max(1, len(arrivals)),
+        "preemptions": engine.preemptions,
+        "admission_holds": engine.admission_rejections,
+        "downshifts": engine.downshifts,
+        "degraded_ticks": engine.degraded_ticks,
+        "by_class": {name: roll(arrs)
+                     for name, arrs in sorted(by_class.items())},
+    })
+    return summary

@@ -1,0 +1,355 @@
+"""Fault injection against the serving engine: every injected fault must
+have a measured response (counters moved), a bounded one (no crash, no
+hang, preemptions capped per request), and a recovering one (the engine
+returns to clean service when the window ends) — while every token any
+degraded mode emits stays bit-identical to the fault-free engine's
+stream for that request (full stream for completed requests, exact
+prefix for force-completed ones)."""
+
+import json
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import autotune
+from repro.models import transformer as T
+from repro.serve import spec
+from repro.serve.engine import (Request, ServeConfig, ServingEngine,
+                                SLOClass, greedy_generate)
+from repro.serve.faults import (Fault, FaultInjector, PHANTOM_SLOT,
+                                canonical_schedule)
+from repro.serve import traffic
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get_smoke("qwen3-4b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _scfg(**kw):
+    base = dict(max_len=64, batch=2, eos_id=-1, paged=True, page_size=8,
+                chunk_size=8)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def _refs(model, prompts, max_new):
+    cfg, params = model
+    return {rid: np.asarray(greedy_generate(
+        params, cfg, jnp.asarray(pr)[None], max_new, max_len=64)[0]).tolist()
+        for rid, pr in prompts.items()}
+
+
+def _drive(eng, inj, max_ticks=400):
+    for _ in range(max_ticks):
+        inj.step(eng)
+        eng.tick()
+        if not eng.queue and all(s is None for s in eng.slots):
+            break
+    inj.finish(eng)
+
+
+# ----------------------------------------------------------------------------
+# Pressure signal + degradation latch (pure functions)
+# ----------------------------------------------------------------------------
+
+def test_serve_pressure_saturates_on_either_resource():
+    assert autotune.serve_pressure(0.0, 0, 8) == 0.0
+    assert autotune.serve_pressure(0.9, 0, 8) == pytest.approx(0.9)
+    assert autotune.serve_pressure(0.1, 8, 8) == 1.0     # queue alone
+    assert autotune.serve_pressure(2.0, 100, 8) == 1.0   # bounded
+    assert autotune.serve_pressure(0.5, 2, 8) == 0.5     # max, not sum
+
+
+def test_choose_degradation_hysteresis():
+    h, lo = autotune.DEGRADE_HIGH, autotune.DEGRADE_LOW
+    assert not autotune.choose_degradation(h - 0.01, False)
+    assert autotune.choose_degradation(h, False)          # enter at high
+    assert autotune.choose_degradation(lo + 0.01, True)   # dead band holds
+    assert not autotune.choose_degradation(lo, True)      # leave at low
+    with pytest.raises(AssertionError):
+        autotune.choose_degradation(0.5, False, high=0.3, low=0.6)
+
+
+# ----------------------------------------------------------------------------
+# Preemption policy: priority + cost victim choice, guards
+# ----------------------------------------------------------------------------
+
+def test_choose_victim_protects_high_class_and_near_done(model):
+    cfg, params = model
+    rng = np.random.RandomState(0)
+    eng = ServingEngine(params, cfg, _scfg(
+        batch=3, classes=(SLOClass("hi", priority=2), SLOClass("lo")),
+        max_preemptions=3, preempt_cooldown=2))
+    pr = {r: rng.randint(2, cfg.vocab, 8).astype(np.int32) for r in range(3)}
+    eng.submit(Request(rid=0, prompt=pr[0], max_new=20, rclass="hi"))
+    eng.submit(Request(rid=1, prompt=pr[1], max_new=20, rclass="lo"))
+    eng.submit(Request(rid=2, prompt=pr[2], max_new=8, rclass="lo"))
+    for _ in range(3):
+        eng.tick()
+    assert all(s is not None for s in eng.slots)
+    # rid1: lo class, far from done -> cheapest eviction.
+    assert eng._choose_victim([0, 1, 2]) == 1
+    # Storm guard: a just-readmitted slot is skipped while others exist.
+    eng.slots[1].readmitted_at = eng.ticks
+    assert eng._choose_victim([0, 1, 2]) == 2
+    # Cap guard: a capped slot is skipped; the cooling one returns as the
+    # fallback before the high-class slot is touched.
+    eng.slots[2].preempt_count = 3
+    assert eng._choose_victim([0, 1, 2]) == 1
+    # A preemption that must happen always can: sole victim wins every
+    # filter fallback.
+    assert eng._choose_victim([2]) == 2
+
+
+def test_churn_storm_is_bounded_by_max_preemptions(model):
+    """Satellite: a sustained preemption storm (one forced eviction per
+    tick through the engine's own victim policy) can never preempt the
+    same request more than ``max_preemptions`` times — the next eviction
+    force-completes or cleanly rejects it, and nothing hangs."""
+    cfg, params = model
+    rng = np.random.RandomState(1)
+    reqs = [Request(rid=r, prompt=rng.randint(2, cfg.vocab, 10)
+                    .astype(np.int32), max_new=16) for r in range(4)]
+    eng = ServingEngine(params, cfg, _scfg(
+        batch=2, max_preemptions=2, preempt_cooldown=1))
+    for r in reqs:
+        eng.submit(r)
+    inj = FaultInjector([Fault(kind=FaultInjector.SLOT_CHURN, start=2,
+                               stop=40, victims_per_tick=2)])
+    _drive(eng, inj)
+    assert not eng.queue and all(s is None for s in eng.slots)
+    for r in reqs:
+        assert r.preempt_count <= 2, (r.rid, r.preempt_count)
+        assert eng.outcome[r.rid] in (
+            "done", "forced:preempt_limit", "rejected:preempt_limit",
+            "forced:max_len")
+    evictions = {}
+    for rid, _, _ in eng.preemption_log:
+        evictions[rid] = evictions.get(rid, 0) + 1
+    assert evictions and all(n <= 2 for n in evictions.values())
+    # The storm was violent enough that the cap actually fired.
+    assert any(o.endswith("preempt_limit") for o in eng.outcome.values())
+
+
+# ----------------------------------------------------------------------------
+# Pool exhaustion: squeezed to zero free pages, then recovery
+# ----------------------------------------------------------------------------
+
+def test_pool_squeeze_degrades_then_recovers_bit_identical(model):
+    """A phantom co-tenant grabs every free page for six ticks. The
+    engine must hold admissions / preempt / self-preempt (measured),
+    never crash, and once the squeeze clears, finish everything it can
+    — with every completed stream bit-identical to the fault-free run
+    and every force-completed stream an exact prefix of it."""
+    cfg, params = model
+    rng = np.random.RandomState(2)
+    prompts = {r: rng.randint(2, cfg.vocab, 12).astype(np.int32)
+               for r in range(4)}
+    refs = _refs(model, prompts, 8)
+
+    eng = ServingEngine(params, cfg, _scfg(batch=2, n_pages=17,
+                                           max_preemptions=3))
+    for r, pr in prompts.items():
+        eng.submit(Request(rid=r, prompt=pr, max_new=8))
+    inj = FaultInjector([Fault(kind=FaultInjector.POOL_SQUEEZE, start=2,
+                               stop=8, min_free=0)])
+    _drive(eng, inj)
+    assert inj.injected == 1 and inj.cleared == 1
+    # Measured response: the squeeze visibly moved the failure counters.
+    assert eng.admission_rejections + eng.preemptions >= 1
+    # Bounded + recovering: every request terminal, phantom released,
+    # no page leaked.
+    assert PHANTOM_SLOT not in eng.pool.slot_pages
+    assert eng.pool.pages_in_use == 0
+    for r in prompts:
+        out = eng.outcome[r]
+        if out == "done":
+            assert eng.finished[r] == refs[r], r
+        elif out.startswith("forced"):
+            got = eng.finished[r]
+            assert got == refs[r][:len(got)], r       # exact prefix
+        else:
+            assert out.startswith("rejected:"), out
+
+
+# ----------------------------------------------------------------------------
+# Accept-rate collapse: adaptive disable, then probe-driven recovery
+# ----------------------------------------------------------------------------
+
+def test_accept_collapse_probe_ticks_recover_speculation(model):
+    """Satellite (ROADMAP carry-over): the ``k_live=0`` disable regime
+    used to be terminal. With ``spec_probe_every`` set, an injected
+    accept collapse must drive ``k_live`` to 0, and once the fault
+    clears, periodic k=1 trial ticks must feed the adaptation window
+    until speculation re-opens — with the emitted stream exactly the
+    plain reference throughout."""
+    cfg, params = model
+    prompt = list(range(3, 11))
+    ref = np.asarray(greedy_generate(
+        params, cfg, jnp.asarray(prompt)[None], 40, max_len=64)[0]).tolist()
+    draft = spec.ScriptedDraft(len(prompt), ref, [1], cfg.vocab)
+    eng = ServingEngine(params, cfg, _scfg(
+        batch=2, spec_k=2, draft=draft, spec_adapt_every=2,
+        spec_probe_every=2))
+    eng.submit(Request(rid=0, prompt=np.asarray(prompt, np.int32),
+                       max_new=40))
+    inj = FaultInjector([Fault(kind=FaultInjector.ACCEPT_COLLAPSE,
+                               start=3, stop=11)])
+    disabled_at = None
+    for _ in range(200):
+        inj.step(eng)
+        eng.tick()
+        if disabled_at is None and eng.k_live == 0:
+            disabled_at = eng.ticks
+        if not eng.queue and all(s is None for s in eng.slots):
+            break
+    inj.finish(eng)
+    assert eng.finished[0] == ref                     # bit-identical
+    assert disabled_at is not None, \
+        "collapsed accept rate must disable speculation"
+    assert eng.spec_probes >= 1                       # trial ticks ran
+    assert eng.k_live >= 1, \
+        "probing must re-open speculation after the collapse clears"
+    assert eng.verify_traces == 1                     # still one executable
+
+
+def test_without_probing_disable_stays_terminal(model):
+    """Regression guard for the legacy contract: spec_probe_every=None
+    keeps the disable regime terminal even after the fault clears."""
+    cfg, params = model
+    prompt = list(range(5, 13))
+    ref = np.asarray(greedy_generate(
+        params, cfg, jnp.asarray(prompt)[None], 24, max_len=64)[0]).tolist()
+    draft = spec.ScriptedDraft(len(prompt), ref, [1], cfg.vocab)
+    eng = ServingEngine(params, cfg, _scfg(batch=2, spec_k=2, draft=draft,
+                                           spec_adapt_every=2))
+    eng.submit(Request(rid=0, prompt=np.asarray(prompt, np.int32),
+                       max_new=24))
+    inj = FaultInjector([Fault(kind=FaultInjector.ACCEPT_COLLAPSE,
+                               start=2, stop=8)])
+    _drive(eng, inj)
+    assert eng.finished[0] == ref
+    assert eng.k_live == 0 and eng.spec_probes == 0
+
+
+# ----------------------------------------------------------------------------
+# Torn tuning-cache reads
+# ----------------------------------------------------------------------------
+
+def test_torn_tuning_cache_discards_and_heals(tmp_path, monkeypatch):
+    """CACHE_TORN truncates the persistent tuning cache mid-JSON (a torn
+    concurrent write). The loader must discard the bad file and carry on
+    analytically — never crash — and the window's end restores the
+    original bytes byte-for-byte."""
+    path = str(tmp_path / "attn_tuning_cache.json")
+    good = {"k0": {"block_q": 128, "block_k": 128, "time_s": 1e-3,
+                   "terms": {}}}
+    with open(path, "w") as f:
+        json.dump(good, f)
+    monkeypatch.setattr(autotune, "TUNING_CACHE_PATH", path)
+    monkeypatch.setattr(autotune, "_tuning_cache", None)
+    assert autotune._load_tuning_cache() == good
+
+    stub = types.SimpleNamespace(ticks=0, pool=None, slots=[],
+                                 _prefilling={}, draft=None)
+    inj = FaultInjector([Fault(kind=FaultInjector.CACHE_TORN, start=1,
+                               stop=3)], cache_path=path)
+    stub.ticks = 1
+    inj.step(stub)                    # arm: tear the file
+    assert autotune._load_tuning_cache() == {}     # discarded, no crash
+    stub.ticks = 3
+    inj.step(stub)                    # disarm: heal
+    assert inj.injected == 1 and inj.cleared == 1
+    assert autotune._load_tuning_cache() == good   # bytes restored
+
+
+# ----------------------------------------------------------------------------
+# Degradation ladder: downshift under pressure, recover, stay exact
+# ----------------------------------------------------------------------------
+
+def test_degradation_ladder_downshifts_and_recovers(model):
+    """A queue deeper than the batch drives pressure past the enter
+    threshold: the engine must latch degraded (spec off, chunk budget
+    1), spend measurable ticks there, and *leave* once pressure clears
+    — with every emitted stream identical to the non-degrading engine's
+    (the downshifts are stream-transparent by construction)."""
+    cfg, params = model
+    rng = np.random.RandomState(4)
+    prompts = {r: rng.randint(2, cfg.vocab, 16).astype(np.int32)
+               for r in range(6)}
+
+    def run(degrade):
+        eng = ServingEngine(params, cfg, _scfg(batch=2, degrade=degrade))
+        for r, pr in prompts.items():
+            eng.submit(Request(rid=r, prompt=pr, max_new=6))
+        eng.run_until_drained()
+        return eng
+
+    hot, ref = run(True), run(False)
+    assert hot.downshifts >= 1 and hot.degraded_ticks >= 1
+    assert not hot.degraded, "pressure cleared: the latch must release"
+    assert hot.last_pressure <= hot.scfg.pressure_low
+    for r in prompts:
+        assert hot.finished[r] == ref.finished[r], r
+
+
+# ----------------------------------------------------------------------------
+# The seeded end-to-end schedule (acceptance criterion)
+# ----------------------------------------------------------------------------
+
+def test_canonical_fault_schedule_end_to_end(model):
+    """Pool exhaustion, then accept collapse, then a churn storm — the
+    acceptance schedule — against open-loop traffic on the full stack
+    (spec + adaptation + probing + degradation + SLO admission). Every
+    offered request must complete or cleanly reject (zero crashes,
+    zero hangs), and every surviving stream must be bit-identical to
+    the fault-free engine's (prefix-exact for force-completed ones)."""
+    cfg, params = model
+
+    def build():
+        return ServingEngine(params, cfg, _scfg(
+            batch=2, n_pages=17, spec_k=2, draft="ngram",
+            spec_adapt_every=4, spec_probe_every=4,
+            classes=(SLOClass("default", ttft_slo=16),),
+            max_queue=8, max_preemptions=3, degrade=True))
+
+    arr = traffic.TrafficGenerator(traffic.TrafficConfig(
+        rate=1.5, n_requests=18, seed=11, vocab=cfg.vocab,
+        classes=(traffic.TrafficClass("default", prompt_lo=4, prompt_hi=20,
+                                      out_lo=2, out_hi=8),))).arrivals()
+
+    inj = FaultInjector(canonical_schedule(t0=4, dwell=8, gap=6))
+    faulty = build()
+    res = traffic.run_open_loop(faulty, arr, max_ticks=2000, injector=inj)
+    inj.finish(faulty)
+    clean = build()
+    res_clean = traffic.run_open_loop(clean, arr, max_ticks=2000)
+
+    # Zero hangs: every offered request reached a terminal outcome.
+    assert res["unresolved"] == [] and res_clean["unresolved"] == []
+    # All three fault windows armed and cleared.
+    assert inj.injected == 3 and inj.cleared == 3
+    assert faulty.pool.pages_in_use == 0
+    # Bit-identical on survivors; exact prefixes on forced completions.
+    compared = 0
+    for a in arr:
+        if clean.outcome.get(a.rid) != "done":
+            continue
+        out = faulty.outcome[a.rid]
+        if out == "done":
+            assert faulty.finished[a.rid] == clean.finished[a.rid], a.rid
+            compared += 1
+        elif out.startswith("forced"):
+            got = faulty.finished[a.rid]
+            assert got == clean.finished[a.rid][:len(got)], a.rid
+            compared += 1
+    assert compared >= 5, "schedule killed (almost) every stream"
+    s = traffic.summarize(faulty, arr)
+    assert s["done"] + s["forced"] + s["rejected"] == len(arr)
