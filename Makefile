@@ -5,9 +5,12 @@ check:
 	./scripts/check.sh
 
 # Serving fast-path bench: engine tokens/sec + modeled naive-vs-flash-decode
-# speedup, persisted for diffing across PRs.
+# speedup, then the breaking-point sweep + telemetry overhead/drift cells;
+# both merge into the same json (read-modify-write), persisted for diffing
+# across PRs.
 bench-fast:
 	PYTHONPATH=src python -m benchmarks.tpu_serving --out BENCH_serving.json
+	PYTHONPATH=src python -m benchmarks.breaking_point --out BENCH_serving.json
 
 # Everything, including slow multi-device subprocess / compile tests.
 check-all:

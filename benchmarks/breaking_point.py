@@ -44,7 +44,7 @@ import numpy as np
 
 from repro import configs
 from repro.models import transformer as T
-from repro.serve import traffic
+from repro.serve import telemetry, traffic
 from repro.serve.engine import Request, ServeConfig, ServingEngine, SLOClass
 from repro.serve.faults import FaultInjector, canonical_schedule
 
@@ -82,8 +82,10 @@ def _engine(params, cfg, **kw) -> ServingEngine:
         np.arange(3, 12, dtype=np.int32), eng.chunk + 1), max_new=2))
     eng.run_until_drained()
     eng.pool.high_water = 0
-    eng.admission_rejections = 0
-    eng.preemptions = 0
+    # One reset clears the trace ring, every counter view (admission
+    # holds, preemptions, spec accounting, ...) and the span/tick timing
+    # aggregates, so the timed region starts from a clean epoch.
+    eng.telemetry.reset()
     eng.ticks = 0
     return eng
 
@@ -99,10 +101,13 @@ def sweep_cell(params, cfg) -> dict:
         wall = time.perf_counter() - t0
         assert res["unresolved"] == [], (rate, res["unresolved"])
         s = traffic.summarize(eng, arr)
+        tstats = eng.telemetry.tick_stats()
         points.append({
             "offered_rate": rate,
             "ticks": s["ticks"],
             "tick_wall_s": wall / max(1, s["ticks"]),
+            "tick_wall_p50_s": tstats["p50_s"],
+            "tick_wall_p99_s": tstats["p99_s"],
             "done": s["done"], "forced": s["forced"],
             "rejected": s["rejected"],
             "ttft_p50": s["ttft_p50"], "ttft_p99": s["ttft_p99"],
@@ -181,6 +186,104 @@ def faults_cell(params, cfg) -> dict:
     }
 
 
+def telemetry_overhead_cell(params, cfg) -> dict:
+    """Tracing must be observational: same tokens, < 5% wall overhead.
+
+    Runs the identical rate-1.0 workload with telemetry on and off
+    (best-of-3 each to damp scheduler noise) and compares both the
+    finished token streams (bit parity) and the wall clocks.
+    """
+    arr = traffic.TrafficGenerator(_traffic_cfg(1.0, cfg.vocab)).arrivals()
+
+    def run(enabled: bool):
+        walls, finished, n_events = [], None, 0
+        for _ in range(3):
+            eng = _engine(params, cfg, telemetry=enabled)
+            t0 = time.perf_counter()
+            res = traffic.run_open_loop(eng, arr, max_ticks=4000)
+            walls.append(time.perf_counter() - t0)
+            assert res["unresolved"] == []
+            assert finished is None or finished == eng.finished, \
+                "non-deterministic replay"
+            finished = eng.finished
+            n_events = len(eng.telemetry.events)
+        return min(walls), finished, n_events
+
+    traced_wall, traced_fin, n_events = run(True)
+    plain_wall, plain_fin, _ = run(False)
+    parity = traced_fin == plain_fin
+    ratio = traced_wall / max(1e-9, plain_wall)
+    print(f"  traced {traced_wall*1e3:.1f} ms vs untraced "
+          f"{plain_wall*1e3:.1f} ms -> overhead x{ratio:.3f}, "
+          f"parity={parity}, {n_events} events")
+    return {
+        "arch": ARCH, "seed": SEED, "n_requests": len(arr),
+        "repeats": 3,
+        "traced_wall_s": traced_wall,
+        "untraced_wall_s": plain_wall,
+        "overhead_ratio": ratio,
+        "parity": bool(parity),
+        "trace_events": n_events,
+    }
+
+
+def model_vs_measured_cell(params, cfg) -> dict:
+    """Drift gate: analytic serving models vs measured engine spans.
+
+    Runs the spec-decode engine (so decode, prefill_chunk *and*
+    spec_verify spans all populate) under open-loop traffic, then asks
+    ``telemetry.drift_report`` to price the same geometry through
+    ``autotune.paged_decode_model`` / ``prefill_chunk_model`` /
+    ``spec_decode_model`` and report measured/modeled ratios. Ratios are
+    host-dependent, so the validator gates them on *finite and positive*
+    (i.e. the spans were actually measured), not on a magnitude band.
+    ``persist=True`` drops each measurement into the attn tuning cache
+    under ``serve_measured:`` keys for cross-run comparison.
+    """
+    arr = traffic.TrafficGenerator(_traffic_cfg(1.5, cfg.vocab)).arrivals()
+    eng = _engine(params, cfg, spec_k=2, draft="ngram",
+                  spec_adapt_every=4, spec_probe_every=4)
+    res = traffic.run_open_loop(eng, arr, max_ticks=4000)
+    assert res["unresolved"] == []
+    rep = telemetry.drift_report(eng, persist=True)
+    for comp in ("decode", "prefill_chunk", "spec_verify"):
+        row = rep.get(comp)
+        if row is None:
+            continue
+        print(f"  {comp}: measured {row['measured_s']*1e3:.2f} ms vs "
+              f"modeled {row['modeled_s']*1e3:.2f} ms "
+              f"-> ratio {row['ratio']:.2f} ({row['n_spans']} spans)")
+    return {"arch": ARCH, "seed": SEED, **rep}
+
+
+def run():
+    """benchmarks/run.py entry point: one derived row per cell."""
+    cfg = configs.get_smoke(ARCH)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    sweep = sweep_cell(params, cfg)
+    faults = faults_cell(params, cfg)
+    overhead = telemetry_overhead_cell(params, cfg)
+    drift = model_vs_measured_cell(params, cfg)
+    knee = next(p for p in sweep["points"]
+                if p["offered_rate"] == sweep["knee_rate"])
+    ratios = ";".join(
+        f"{comp}={drift[comp]['ratio']:.2f}" for comp
+        in ("decode", "prefill_chunk", "spec_verify") if comp in drift)
+    return [
+        ("sweep",
+         f"knee_rate={sweep['knee_rate']};"
+         f"goodput={sweep['knee_goodput_tokens_per_tick']:.3f}tok/tick;"
+         f"shed@knee={knee['shed_rate']:.2f}"),
+        ("faults",
+         f"parity={faults['parity']};cleared={faults['faults_cleared']};"
+         f"leaked={faults['pool_pages_leaked']}"),
+        ("telemetry_overhead",
+         f"x{overhead['overhead_ratio']:.3f};"
+         f"parity={overhead['parity']};events={overhead['trace_events']}"),
+        ("model_vs_measured", ratios),
+    ]
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=None,
@@ -195,9 +298,15 @@ def main():
     sweep = sweep_cell(params, cfg)
     print("canonical fault schedule:")
     faults = faults_cell(params, cfg)
+    print("telemetry overhead:")
+    overhead = telemetry_overhead_cell(params, cfg)
+    print("model vs measured:")
+    drift = model_vs_measured_cell(params, cfg)
 
     payload = {"breaking_point_sweep": sweep,
-               "breaking_point_faults": faults}
+               "breaking_point_faults": faults,
+               "telemetry_overhead": overhead,
+               "model_vs_measured": drift}
     print(json.dumps(payload, indent=1))
 
     # Acceptance (mirrored as hard gates in scripts/validate_artifacts.py).
@@ -213,6 +322,12 @@ def main():
     assert faults["parity"] is True
     assert faults["faults_injected"] == faults["faults_cleared"] == 3
     assert faults["pool_pages_leaked"] == 0
+    assert overhead["parity"] is True, "tracing changed the token stream"
+    assert overhead["overhead_ratio"] < 1.05, overhead["overhead_ratio"]
+    for comp in ("decode", "prefill_chunk", "spec_verify"):
+        row = drift.get(comp)
+        assert row is not None, f"{comp} spans never measured"
+        assert row["ratio"] > 0.0, (comp, row)
 
     if args.out:
         existing = {}

@@ -40,6 +40,7 @@ MODULES = [
     "tpu_collectives",  # ICI alpha-beta curves over a real mesh  [slow]
     "tpu_e2e",          # roofline summary of the dry-run cells
     "tpu_serving",      # engine tokens/sec + modeled flash-decode speedup
+    "breaking_point",   # load sweep + faults + telemetry overhead/drift
 ]
 
 SLOW = {"table_3_1", "tpu_collectives"}

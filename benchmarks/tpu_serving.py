@@ -512,8 +512,15 @@ def main():
     assert payload["tp_decode_32k"]["speedup"] > 1.0
     assert payload["tp_decode_32k"]["pool_capacity_ratio"] == TP_DEVICES
     if args.out:
+        # Read-modify-write: breaking_point.py merges its cells into the
+        # same BENCH json, so a rerun here must not clobber them.
+        existing = {}
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f)
+        existing.update(payload)
         with open(args.out, "w") as f:
-            json.dump(payload, f, indent=1)
+            json.dump(existing, f, indent=1)
         print(f"wrote {args.out}")
 
 

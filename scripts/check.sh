@@ -48,7 +48,12 @@ if [[ $# -eq 0 ]]; then
     # The robustness contract: open-loop traffic determinism, SLO
     # admission/shedding, and the seeded fault schedule (pool squeeze,
     # accept collapse, churn storm) with bit-identical surviving streams.
-    python -m pytest -x -q tests/test_serve_faults.py tests/test_traffic.py
+    # test_telemetry gates the observability contract on top: tracing is
+    # bit-identical to the untraced engine on every path (greedy,
+    # sampled, spec, faults), and the event trace reconciles exactly
+    # against the legacy counters and the pool's conservation law.
+    python -m pytest -x -q tests/test_serve_faults.py tests/test_traffic.py \
+        tests/test_telemetry.py
     IGNORES=(--ignore=tests/test_serve.py --ignore=tests/test_serve_paged.py
              --ignore=tests/test_serve_chunked.py
              --ignore=tests/test_serve_spec.py
@@ -56,7 +61,8 @@ if [[ $# -eq 0 ]]; then
              --ignore=tests/test_paged_kv.py
              --ignore=tests/test_serve_dist.py
              --ignore=tests/test_serve_faults.py
-             --ignore=tests/test_traffic.py)
+             --ignore=tests/test_traffic.py
+             --ignore=tests/test_telemetry.py)
 fi
 
 echo "== test suite =="

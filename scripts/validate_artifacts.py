@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import glob
 import json
+import math
 import numbers
 import os
 import sys
@@ -54,6 +55,14 @@ def check_tuning_cache(path: str) -> None:
     if not isinstance(obj, dict):
         return fail(path, f"root is {type(obj).__name__}, want object")
     for key, entry in obj.items():
+        if key.startswith("serve_measured:"):
+            # Measured serving spans (serve/telemetry.py drift gate):
+            # no kernel block geometry, just a positive wall time.
+            if not (isinstance(entry, dict)
+                    and isinstance(entry.get("time_s"), numbers.Real)
+                    and entry["time_s"] > 0):
+                fail(path, f"implausible measurement {key!r}")
+            continue
         if not isinstance(entry, dict) or not {
                 "block_q", "block_k", "time_s", "terms"} <= set(entry):
             fail(path, f"malformed entry {key!r}")
@@ -125,12 +134,28 @@ def check_bench_serving(path: str) -> None:
                    "breaking_point_faults.streams_compared",
                    "breaking_point_faults.shed_rate",
                    "breaking_point_faults.spec_probes",
-                   "breaking_point_faults.pool_pages_leaked"):
+                   "breaking_point_faults.pool_pages_leaked",
+                   "telemetry_overhead.traced_wall_s",
+                   "telemetry_overhead.untraced_wall_s",
+                   "telemetry_overhead.overhead_ratio",
+                   "telemetry_overhead.repeats",
+                   "telemetry_overhead.trace_events",
+                   "model_vs_measured.schema_version",
+                   "model_vs_measured.decode.measured_s",
+                   "model_vs_measured.decode.modeled_s",
+                   "model_vs_measured.decode.ratio",
+                   "model_vs_measured.prefill_chunk.measured_s",
+                   "model_vs_measured.prefill_chunk.modeled_s",
+                   "model_vs_measured.prefill_chunk.ratio",
+                   "model_vs_measured.spec_verify.measured_s",
+                   "model_vs_measured.spec_verify.modeled_s",
+                   "model_vs_measured.spec_verify.ratio"):
         require(path, obj, dotted)
     require(path, obj, "tp_pool_capacity.parity", bool)
     require(path, obj, "breaking_point_faults.parity", bool)
     require(path, obj, "breaking_point_sweep.offered_rates", list)
     require(path, obj, "breaking_point_sweep.points", list)
+    require(path, obj, "telemetry_overhead.parity", bool)
     if len(FAILURES) == before:
         if not obj["modeled_decode_32k"]["speedup"] > 1.0:
             fail(path, "flash-decode speedup <= 1")
@@ -214,6 +239,24 @@ def check_bench_serving(path: str) -> None:
             fail(path, "canonical schedule did not arm+clear all 3 faults")
         if bf["pool_pages_leaked"] != 0:
             fail(path, "fault run leaked pool pages")
+        # Telemetry acceptance: tracing is observational — identical
+        # token streams and < 5% wall overhead on the smoke workload —
+        # and the drift gate actually *measured* every component (a
+        # ratio of 0 is the never-measured sentinel; wall clocks are
+        # host-dependent so magnitude is not gated, presence is).
+        to = obj["telemetry_overhead"]
+        if to["parity"] is not True:
+            fail(path, "tracing changed the token stream")
+        if not 0 < to["overhead_ratio"] < 1.05:
+            fail(path, "telemetry overhead_ratio not in (0, 1.05)")
+        if not to["trace_events"] > 0:
+            fail(path, "traced run recorded no events")
+        for comp in ("decode", "prefill_chunk", "spec_verify"):
+            row = obj["model_vs_measured"][comp]
+            for k in ("measured_s", "modeled_s", "ratio"):
+                if not (math.isfinite(row[k]) and row[k] > 0):
+                    fail(path, f"model_vs_measured.{comp}.{k} "
+                               f"not finite/positive")
 
 
 SPECIFIC = {

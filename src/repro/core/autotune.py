@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import os
 import tempfile
 from typing import Iterable, List, Optional, Tuple
@@ -319,6 +320,38 @@ def _store_tuning_cache(key: str, entry: dict) -> None:
         os.replace(tmp, TUNING_CACHE_PATH)
     except OSError:
         pass                       # read-only image: in-memory cache only
+
+
+# Measured serving-path timings (``serve.telemetry.drift_report``) share
+# the persistent tuning cache under their own key namespace, so the
+# calibration pass the ROADMAP names reads model-vs-measured evidence
+# from the same file the block-shape tuner already maintains. Entries:
+# {"time_s": measured mean span, "modeled_s", "ratio", "n", "source"}.
+SERVE_MEASURED_PREFIX = "serve_measured:"
+
+
+def record_serve_measurement(name: str, entry: dict) -> None:
+    """Persist one measured serving-span entry (keyed by component and
+    engine geometry) into the tuning cache."""
+    assert isinstance(entry.get("time_s"), float) and entry["time_s"] > 0, \
+        entry
+    _store_tuning_cache(SERVE_MEASURED_PREFIX + name, dict(entry))
+
+
+def load_serve_measurement(name: str) -> Optional[dict]:
+    return _load_tuning_cache().get(SERVE_MEASURED_PREFIX + name)
+
+
+def drift_ratio(measured_s: float, modeled_s: float) -> float:
+    """measured/modeled with a 0.0 sentinel for missing or degenerate
+    inputs — downstream gates require the ratio finite and > 0, so a
+    run that never measured (or a model that priced 0) fails the gate
+    instead of sneaking through as inf/nan."""
+    if not (math.isfinite(measured_s) and math.isfinite(modeled_s)):
+        return 0.0
+    if measured_s <= 0.0 or modeled_s <= 0.0:
+        return 0.0
+    return measured_s / modeled_s
 
 
 def choose_attn_block(p: AttnProblem,

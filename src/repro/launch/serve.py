@@ -25,6 +25,7 @@ fault schedule on top:
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -58,9 +59,11 @@ def _parse_tenant(spec: str):
         name, weight=num("weight", 1.0),
         prompt_lo=int(num("prompt-lo", 4)),
         prompt_hi=int(num("prompt-hi", 12)),
-        out_lo=int(num("out-lo", 2)), out_hi=int(num("out-hi", 8)))
+        out_lo=int(num("out-lo", 2)), out_hi=int(num("out-hi", 8)),
+        ttft_ms=num("ttft-ms"), tpot_ms=num("tpot-ms"))
     known = {"priority", "ttft", "tpot", "rate", "burst", "weight",
-             "prompt-lo", "prompt-hi", "out-lo", "out-hi"}
+             "prompt-lo", "prompt-hi", "out-lo", "out-hi",
+             "ttft-ms", "tpot-ms"}
     if set(kv) - known:
         raise SystemExit(f"--tenant unknown keys {sorted(set(kv) - known)}")
     return slo, tcls
@@ -121,7 +124,9 @@ def main(argv=None):
                            "prompt-lo=4,prompt-hi=12,out-lo=2,out-hi=8'. "
                            "priority orders admission and shedding; "
                            "rate/burst meter a token bucket; ttft/tpot set "
-                           "the SLO targets the report scores")
+                           "the SLO targets the report scores (ticks); "
+                           "ttft-ms/tpot-ms score the same wall-clock "
+                           "against the measured tick time")
     traf.add_argument("--max-queue", type=int, default=None,
                       help="bounded admission queue: overflow sheds the "
                            "lowest-priority newest request (explicit "
@@ -143,6 +148,16 @@ def main(argv=None):
                       help="run the canonical seeded fault schedule (pool "
                            "squeeze -> accept collapse -> churn storm) "
                            "against the traffic")
+    obs = ap.add_argument_group(
+        "observability (serve/telemetry.py)",
+        "Structured tick traces and wall-clock spans are on by default "
+        "(ring-buffered, overhead-bounded, stream-transparent).")
+    obs.add_argument("--trace-out", default=None, metavar="PATH",
+                     help="write the Chrome-trace/Perfetto JSON timeline "
+                          "here after the run (open at ui.perfetto.dev)")
+    obs.add_argument("--no-telemetry", action="store_true",
+                     help="disable the event ring and wall-clock spans "
+                          "(decision counters stay exact either way)")
     args = ap.parse_args(argv)
 
     if args.spec_k and not args.paged:
@@ -188,7 +203,10 @@ def main(argv=None):
         degrade=args.degrade,
         spec_adapt_every=(args.spec_probe_every
                           if args.spec_probe_every else None),
-        spec_probe_every=args.spec_probe_every)
+        spec_probe_every=args.spec_probe_every,
+        telemetry=not args.no_telemetry)
+    if args.trace_out and args.no_telemetry:
+        raise SystemExit("--trace-out needs telemetry (drop --no-telemetry)")
     engine = ServingEngine(params, cfg, scfg, mesh=mesh)
     t0 = time.time()
     if args.rate is not None:
@@ -205,7 +223,7 @@ def main(argv=None):
         if inj is not None:
             inj.finish(engine)
         dt = time.time() - t0
-        s = traffic.summarize(engine, arrivals)
+        s = traffic.summarize(engine, arrivals, classes=tcfg.classes)
         print(f"offered {s['offered']} requests at rate {args.rate} "
               f"({args.process}): {s['done']} done, {s['forced']} forced, "
               f"{s['rejected']} rejected, {len(res['unresolved'])} "
@@ -218,6 +236,12 @@ def main(argv=None):
               f"{s['admission_holds']}, downshifts {s['downshifts']} "
               f"({s['degraded_ticks']} degraded ticks), spec probes "
               f"{engine.spec_probes}")
+        if "tick_wall_s_mean" in s:
+            print(f"  wall-clock: tick mean/p99 "
+                  f"{s['tick_wall_s_mean'] * 1e3:.2f}/"
+                  f"{s['tick_wall_s_p99'] * 1e3:.2f} ms, ttft p50 "
+                  f"{s['ttft_ms_p50']:.0f} ms, tpot p50 "
+                  f"{s['tpot_ms_p50']:.1f} ms/token")
         if inj is not None:
             print(f"  faults: {inj.injected} injected, {inj.cleared} "
                   f"cleared, {engine.pool.pages_in_use if engine.pool else 0}"
@@ -225,6 +249,8 @@ def main(argv=None):
         for name, c in sorted(s["by_class"].items()):
             slo = (f", ttft-slo {c['ttft_slo_attainment']:.0%}"
                    if "ttft_slo_attainment" in c else "")
+            slo += (f", ttft-ms-slo {c['ttft_ms_slo_attainment']:.0%}"
+                    if "ttft_ms_slo_attainment" in c else "")
             print(f"  class {name}: {c['done']}/{c['offered']} done, "
                   f"shed {engine.shed_by_class.get(name, 0)}{slo}")
         finished = engine.finished
@@ -245,7 +271,8 @@ def main(argv=None):
                      if occ["n_devices"] > 1 else "")
         print(f"  paged: {occ['high_water']}/{occ['capacity']} pages "
               f"high-water ({args.page_size} rows each){mesh_note}, "
-              f"chunk={engine.chunk}, "
+              f"{occ['pages_allocated']} alloc / {occ['pages_freed']} "
+              f"freed, chunk={engine.chunk}, "
               f"{engine.admission_rejections} admission holds, "
               f"{engine.preemptions} preemptions")
     if engine.spec_k:
@@ -254,6 +281,23 @@ def main(argv=None):
               f"accepted/tick={engine.spec_accepted / ticks:.2f} "
               f"emitted/tick={engine.spec_emitted / ticks:.2f} "
               f"({engine.verify_traces} verify executable)")
+    tel = engine.telemetry
+    tstats = tel.tick_stats()
+    if tstats["n"]:
+        print(f"  telemetry: tick p50/p99 {tstats['p50_s'] * 1e3:.2f}/"
+              f"{tstats['p99_s'] * 1e3:.2f} ms over {tstats['n']} ticks, "
+              f"{len(tel.events)} events in ring "
+              f"({tel.dropped_events} evicted)")
+        for name, st in sorted(tel.span_stats().items()):
+            print(f"    span {name}: n={st['n']} "
+                  f"exec-mean={st['execute_mean_s'] * 1e3:.2f} ms "
+                  f"(compile {st['compile_n']}x "
+                  f"{st['compile_s'] * 1e3:.1f} ms)")
+    if args.trace_out:
+        with open(args.trace_out, "w") as f:
+            json.dump(tel.chrome_trace(), f)
+        print(f"  wrote {args.trace_out} "
+              f"(open at ui.perfetto.dev or chrome://tracing)")
     for rid in sorted(finished):
         print(f"  req {rid}: {finished[rid][:10]}...")
     return finished

@@ -70,6 +70,7 @@ from repro.dist import sharding as sharding_mod
 from repro.models import transformer as T
 from repro.serve import paged as paged_mod
 from repro.serve import spec as spec_mod
+from repro.serve import telemetry as telemetry_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,6 +164,13 @@ class ServeConfig:
     # adaptation window, so speculation *recovers* when a collapsed
     # accept rate clears (requires spec_adapt_every). None keeps the
     # disable regime terminal (legacy).
+    # -- observability (``serve.telemetry``) -------------------------------
+    telemetry: bool = True       # event ring + wall-clock spans. Disabling
+    # drops the ring buffers and every perf_counter read; the decision
+    # *aggregates* (admission_rejections, shed_by_class, ...) stay exact
+    # either way, and token streams are bit-identical traced or not.
+    trace_capacity: int = 4096   # ring-buffer entries per stream (events,
+    # spans, tick times); eviction never touches the aggregates.
 
 
 def prefill(params, cfg: T.ModelConfig, tokens, caches,
@@ -229,6 +237,21 @@ def greedy_generate(params, cfg: T.ModelConfig, prompt, max_new: int,
                            frontend_embeds=frontend_embeds)
         out.append(tok)
     return jnp.stack(out, axis=1)
+
+
+def _counter_view(key: str, doc: str) -> property:
+    """A legacy engine counter as a view over ``telemetry.counters``.
+
+    Readable and writable (benches zero counters at the warm-up
+    boundary), but the stored value lives in the telemetry aggregates —
+    the event trace and the counter can never disagree."""
+    def get(self):
+        return self.telemetry.counters.get(key, 0)
+
+    def set_(self, v):
+        self.telemetry.counters[key] = int(v)
+
+    return property(get, set_, doc=doc)
 
 
 @dataclasses.dataclass
@@ -336,13 +359,15 @@ class ServingEngine:
         self.prefill_traces: Dict[int, int] = {}
         self.decode_traces = 0
         self.verify_traces = 0            # spec verify executables traced
-        self.admission_rejections = 0     # pool-exhausted admission holds
-        self.preemptions = 0              # slots evicted back to the queue
+        # Observability (``serve.telemetry``): the event trace IS the
+        # bookkeeping — the legacy counters below the class body
+        # (admission_rejections, preemptions, spec stats, shed_by_class,
+        # preemption_log, ...) are properties reading the telemetry
+        # aggregates, so decision accounting has exactly one home.
+        self.telemetry = telemetry_mod.Telemetry(
+            enabled=serve_cfg.telemetry, capacity=serve_cfg.trace_capacity)
         self.ticks = 0
         self.first_token_tick: Dict[int, int] = {}   # rid -> TTFT (ticks)
-        self.spec_ticks = 0        # (slot, tick) verify events
-        self.spec_accepted = 0     # drafted tokens accepted
-        self.spec_emitted = 0      # tokens emitted by verify ticks
         self._prefilling: Dict[int, int] = {}   # slot -> prompt rows written
         self._prefill_wait: Dict[int, int] = {} # slot -> ticks since served
         self._slot_seq: Dict[int, int] = {}     # slot -> admission sequence
@@ -352,9 +377,6 @@ class ServingEngine:
         self.finish_tick: Dict[int, int] = {}   # rid -> tick of last token
         self.rejected: Dict[int, str] = {}      # rid -> shed/reject reason
         self.outcome: Dict[int, str] = {}       # rid -> done|forced:*|rejected:*
-        self.shed_by_class: Dict[str, int] = {} # clean rejects per class
-        self.preemption_log: List[Tuple[int, str, int]] = []  # (rid,
-        # class, tokens generated at eviction) — fairness accounting
         self._arrival_seq: Dict[int, int] = {}  # rid -> submit order
         self._n_arrivals = 0
         self._classes: Dict[str, SLOClass] = {
@@ -372,10 +394,7 @@ class ServingEngine:
             assert serve_cfg.max_preemptions >= 0, serve_cfg.max_preemptions
         assert serve_cfg.preempt_cooldown >= 0
         self.degraded = False           # load-shedding downshift latch
-        self.degraded_ticks = 0         # ticks spent degraded
-        self.downshifts = 0             # clean->degraded transitions
         self.last_pressure = 0.0
-        self.spec_probes = 0            # k=1 trial ticks while disabled
         self._probe_wait = 0
         self.spec_k = serve_cfg.spec_k
         self.k_live = self.spec_k     # adaptive draft width (<= spec_k)
@@ -400,6 +419,38 @@ class ServingEngine:
             assert serve_cfg.prefill_chunks_per_tick >= 1, \
                 serve_cfg.prefill_chunks_per_tick
         self._step = self._make_decode_step()
+
+    # -- telemetry-backed counter views ---------------------------------------
+    # One bookkeeping home: these are the same attributes callers always
+    # read (and benches reset), backed by the event-trace aggregates.
+
+    admission_rejections = _counter_view(
+        "admit_hold", "pool-exhausted admission holds")
+    preemptions = _counter_view(
+        "preempt", "slots evicted back to the queue")
+    spec_ticks = _counter_view(
+        "spec_verify", "(slot, tick) verify events")
+    spec_accepted = _counter_view(
+        "spec_accepted", "drafted tokens accepted")
+    spec_emitted = _counter_view(
+        "spec_emitted", "tokens emitted by verify ticks")
+    spec_probes = _counter_view(
+        "probe_tick", "k=1 trial ticks while speculation is disabled")
+    downshifts = _counter_view(
+        "degrade_enter", "clean->degraded ladder transitions")
+    degraded_ticks = _counter_view(
+        "degraded_tick", "ticks spent in degraded mode")
+
+    @property
+    def shed_by_class(self) -> Dict[str, int]:
+        """Clean rejects per class (view over ``shed`` events)."""
+        return self.telemetry.shed_by_class
+
+    @property
+    def preemption_log(self) -> List[Tuple[int, str, int]]:
+        """(rid, class, tokens generated at eviction) per ``preempt``
+        event — fairness accounting."""
+        return self.telemetry.preemption_log
 
     # -- distributed placement ------------------------------------------------
 
@@ -602,6 +653,8 @@ class ServingEngine:
         both append, never overwrite live entries)."""
         if not pages:
             return
+        self.telemetry.emit(self.ticks, "page_alloc", slot=slot,
+                            n=len(pages))
         have = len(self.pool.slot_pages[slot]) - len(pages)
         cols = jnp.arange(have, have + len(pages))
         vals = jnp.asarray(pages, jnp.int32)
@@ -722,15 +775,20 @@ class ServingEngine:
         self.finished[req.rid] = req.generated
         self.finish_tick[req.rid] = self.ticks
         self.outcome[req.rid] = f"forced:{reason}"
+        self.telemetry.emit(self.ticks, "finish", rid=req.rid,
+                            rclass=req.rclass, outcome=f"forced:{reason}",
+                            n_tokens=len(req.generated))
 
     def _reject(self, req: Request, reason: str) -> None:
         """Terminal: clean reject with explicit accounting — the request
-        emitted nothing and is reported shed, never silently dropped."""
+        emitted nothing and is reported shed, never silently dropped.
+        The ``shed`` event is the record; ``shed_by_class`` is its
+        aggregate view."""
         req.done = True
         self.rejected[req.rid] = reason
         self.outcome[req.rid] = f"rejected:{reason}"
-        self.shed_by_class[req.rclass] = \
-            self.shed_by_class.get(req.rclass, 0) + 1
+        self.telemetry.emit(self.ticks, "shed", rid=req.rid,
+                            rclass=req.rclass, reason=reason)
 
     def _preempt(self, i: int) -> None:
         """Evict slot ``i``: its pages return to the pool and its
@@ -758,10 +816,10 @@ class ServingEngine:
             else:
                 self._reject(req, "preempt_limit")
             return
-        self.preemptions += 1
+        self.telemetry.emit(self.ticks, "preempt", rid=req.rid,
+                            rclass=req.rclass,
+                            n_generated=len(req.generated))
         req.preempt_count += 1
-        self.preemption_log.append((req.rid, req.rclass,
-                                    len(req.generated)))
         self.queue.insert(0, req)
 
     # -- request lifecycle ----------------------------------------------------
@@ -770,6 +828,9 @@ class ServingEngine:
         self.submit_tick.setdefault(req.rid, self.ticks)
         self._arrival_seq.setdefault(req.rid, self._n_arrivals)
         self._n_arrivals += 1
+        self.telemetry.emit(self.ticks, "submit", rid=req.rid,
+                            rclass=req.rclass, prompt_rows=len(req.prompt),
+                            max_new=req.max_new)
         self.queue.append(req)
         mq = self.scfg.max_queue
         if mq is None or len(self.queue) <= mq:
@@ -896,6 +957,9 @@ class ServingEngine:
             self.finished[req.rid] = req.generated
             self.finish_tick[req.rid] = self.ticks
             self.outcome[req.rid] = "done"
+            self.telemetry.emit(self.ticks, "finish", rid=req.rid,
+                                rclass=req.rclass, outcome="done",
+                                n_tokens=len(req.generated))
             self.free_slot(i)
             return True
         return False
@@ -911,7 +975,10 @@ class ServingEngine:
         self._prefill_wait.pop(i, None)
         self._slot_seq.pop(i, None)
         if self.pool is not None:
-            self.pool.free_slot(i)
+            freed = self.pool.free_slot(i)
+            if freed:
+                self.telemetry.emit(self.ticks, "page_free", slot=i,
+                                    n=len(freed))
             self.caches = [
                 dict(c, index=c["index"].at[:, i].set(0),
                      pages=c["pages"].at[:, i].set(0))
@@ -993,7 +1060,10 @@ class ServingEngine:
                         0, min(self.chunk, plen), 0, ps, self.scfg.max_len)
                     if not self.pool.can_alloc(
                             first + self._imminent_page_need()):
-                        self.admission_rejections += 1
+                        self.telemetry.emit(
+                            self.ticks, "admit_hold", rid=req.rid,
+                            rclass=req.rclass, need=first,
+                            free=self.pool.free_pages)
                         return        # hold: everyone waits for pages
                     self.queue.pop(qi)
                     self._charge_bucket(req)
@@ -1003,6 +1073,10 @@ class ServingEngine:
                     self._prefilling[i] = 0
                     self._slot_seq[i] = self._admit_seq
                     self._admit_seq += 1
+                    self.telemetry.emit(
+                        self.ticks, "admit", rid=req.rid, slot=i,
+                        rclass=req.rclass, rows=plen,
+                        readmit=req.preempt_count)
                     self._append_pages(i, self.pool.alloc(i, first))
                     break             # chunks run in _prefill_tick
                 prompt = self._effective_prompt(req)
@@ -1011,12 +1085,20 @@ class ServingEngine:
                     (len(prompt), bucket, self.scfg.max_len)
                 self.queue.pop(qi)
                 self._charge_bucket(req)
+                self.telemetry.emit(
+                    self.ticks, "admit", rid=req.rid, slot=i,
+                    rclass=req.rclass, rows=len(prompt),
+                    readmit=req.preempt_count)
                 padded = np.zeros((1, bucket), np.int32)
                 padded[0, :len(prompt)] = prompt
-                tok, self.caches = self._prefill_fn(bucket)(
-                    self.params, jnp.asarray(padded),
-                    jnp.int32(len(prompt)), jnp.int32(i), self.caches,
-                    self._emit_key(req))
+                with self.telemetry.span("prefill_bucket", self.ticks,
+                                         slot=i) as sp:
+                    n0 = self.prefill_traces.get(bucket, 0)
+                    tok, self.caches = self._prefill_fn(bucket)(
+                        self.params, jnp.asarray(padded),
+                        jnp.int32(len(prompt)), jnp.int32(i), self.caches,
+                        self._emit_key(req))
+                    sp.compile = self.prefill_traces.get(bucket, 0) > n0
                 self.slots[i] = req
                 self._slot_seq[i] = self._admit_seq
                 self._admit_seq += 1
@@ -1096,10 +1178,16 @@ class ServingEngine:
             # the write position so they are never attended, and the
             # sampled logit row is the prompt's true last token.
             last_in = (true_len - 1 - cursor) if end == true_len else n - 1
-            tok, self.caches = self._chunk_fn(
-                self.params, jnp.asarray(chunk_toks), jnp.int32(cursor),
-                jnp.int32(end), jnp.int32(last_in), jnp.int32(i),
-                self.caches, self._emit_key(req))
+            tel = self.telemetry
+            tel.emit(self.ticks, "prefill_chunk", rid=req.rid, slot=i,
+                     start=cursor, rows=n)
+            with tel.span("prefill_chunk", self.ticks, slot=i) as sp:
+                n0 = self.prefill_traces.get(self.chunk, 0)
+                tok, self.caches = self._chunk_fn(
+                    self.params, jnp.asarray(chunk_toks), jnp.int32(cursor),
+                    jnp.int32(end), jnp.int32(last_in), jnp.int32(i),
+                    self.caches, self._emit_key(req))
+                sp.compile = self.prefill_traces.get(self.chunk, 0) > n0
             if end < true_len:
                 self._prefilling[i] = end
                 continue
@@ -1132,9 +1220,16 @@ class ServingEngine:
             self.last_pressure, was,
             self.scfg.pressure_high, self.scfg.pressure_low)
         if self.degraded:
-            self.degraded_ticks += 1
+            # Aggregate-only (no ring event): one count per degraded tick
+            # would flood the ring; the enter/exit *transitions* are the
+            # events worth a timeline mark.
+            self.telemetry.count("degraded_tick")
             if not was:
-                self.downshifts += 1
+                self.telemetry.emit(self.ticks, "degrade_enter",
+                                    pressure=self.last_pressure)
+        elif was:
+            self.telemetry.emit(self.ticks, "degrade_exit",
+                                pressure=self.last_pressure)
 
     def _spec_width(self) -> int:
         """Draft width for this tick. ``k_live`` normally; 0 while the
@@ -1156,21 +1251,31 @@ class ServingEngine:
         if self._probe_wait < self.scfg.spec_probe_every:
             return 0
         self._probe_wait = 0
-        self.spec_probes += 1
+        self.telemetry.emit(self.ticks, "probe_tick")
         return 1
 
     def tick(self) -> int:
         """Admit, advance prefill chunks, one decode step — or one
         speculative draft/verify step (``spec_k > 0``) — for all
-        decode-active slots; returns #slots making progress."""
+        decode-active slots; returns #slots making progress.
+
+        The whole tick runs under a wall-clock span (plus per-phase
+        spans inside): purely host-observed timing — no device syncs or
+        transfers are added, so the traced tick does exactly the work an
+        untraced tick does."""
+        tel = self.telemetry
+        t0 = tel.clock()
         self.ticks += 1
         self._update_pressure()
-        self._admit()
-        self._prefill_tick()
-        self._ensure_decode_pages()
+        with tel.span("admit", self.ticks):
+            self._admit()
+        with tel.span("prefill", self.ticks):
+            self._prefill_tick()
+            self._ensure_decode_pages()
         active = [i for i, s in enumerate(self.slots)
                   if s is not None and i not in self._prefilling]
         if not active:
+            tel.tick_done(self.ticks, t0)
             return len(self._prefilling)
         n = len(active) + len(self._prefilling)
         k = self._spec_width()
@@ -1180,6 +1285,7 @@ class ServingEngine:
         else:
             self._decode_tick(active)
         self._reset_prefill_positions()
+        tel.tick_done(self.ticks, t0)
         return n
 
     def _maybe_adapt_k(self) -> None:
@@ -1211,10 +1317,19 @@ class ServingEngine:
 
     def _decode_tick(self, active: List[int]) -> None:
         """One plain batched decode step: one token per active slot."""
+        tel = self.telemetry
+        # Host-side context accounting for the drift gate (cheap ints —
+        # context_lengths() would sync the device every tick).
+        tel.count("decode_slot_ticks", len(active))
+        tel.count("decode_context_rows",
+                  sum(self._effective_len(self.slots[i]) for i in active))
         rids, ts = self._rid_ts(active)
-        nxt, self.caches = self._step(self.params, self.last_tok,
-                                      self.caches, rids, ts)
-        nxt_host = np.asarray(nxt).copy()
+        with tel.span("decode", self.ticks) as sp:
+            n0 = self.decode_traces
+            nxt, self.caches = self._step(self.params, self.last_tok,
+                                          self.caches, rids, ts)
+            nxt_host = np.asarray(nxt).copy()
+            sp.compile = self.decode_traces > n0
         active_set = set(active)
         for i in range(self.scfg.batch):
             if i in active_set:
@@ -1246,26 +1361,34 @@ class ServingEngine:
         emitted the same tokens."""
         k = self.k_live if k is None else k
         width = self.spec_k + 1
+        tel = self.telemetry
+        tel.count("verify_slot_ticks", len(active))
+        tel.count("verify_context_rows",
+                  sum(self._effective_len(self.slots[i]) for i in active))
         tokens = np.zeros((self.scfg.batch, width), np.int32)
         tokens[:, 0] = np.asarray(self.last_tok)
         base_len: Dict[int, int] = {}
         n_prop: Dict[int, int] = {}
-        for i in active:
-            req = self.slots[i]
-            # Write position before the tick (host-side, no device sync).
-            base_len[i] = self._effective_len(req) - 1
-            # Draft at the *live* width (adaptive: <= spec_k); the verify
-            # executable keeps its fixed spec_k + 1 shape regardless.
-            prop = np.asarray(
-                self.draft.propose(self._draft_history(req), k),
-                np.int32).ravel()[:k]
-            n_prop[i] = len(prop)
-            tokens[i, 1:1 + len(prop)] = np.clip(prop, 0,
-                                                 self.cfg.vocab - 1)
+        with tel.span("draft", self.ticks):
+            for i in active:
+                req = self.slots[i]
+                # Write position before the tick (host, no device sync).
+                base_len[i] = self._effective_len(req) - 1
+                # Draft at the *live* width (adaptive: <= spec_k); the
+                # verify executable keeps its fixed spec_k + 1 shape.
+                prop = np.asarray(
+                    self.draft.propose(self._draft_history(req), k),
+                    np.int32).ravel()[:k]
+                n_prop[i] = len(prop)
+                tokens[i, 1:1 + len(prop)] = np.clip(prop, 0,
+                                                     self.cfg.vocab - 1)
         rids, t0s = self._rid_ts(active)
-        picks, self.caches = self._verify_fn(
-            self.params, jnp.asarray(tokens), self.caches, rids, t0s)
-        picks = np.asarray(picks)
+        with tel.span("spec_verify", self.ticks) as sp:
+            n0 = self.verify_traces
+            picks, self.caches = self._verify_fn(
+                self.params, jnp.asarray(tokens), self.caches, rids, t0s)
+            picks = np.asarray(picks)
+            sp.compile = self.verify_traces > n0
         last = np.zeros((self.scfg.batch,), np.int32)
         cols: List[int] = []
         vals: List[int] = []
@@ -1277,17 +1400,19 @@ class ServingEngine:
             # cell and any measured-accept feedback into choose_spec_k).
             accepted, emitted = spec_mod.longest_accept(
                 tokens[i, 1:1 + n_prop[i]], picks[i, :n_prop[i] + 1])
-            self.spec_ticks += 1
-            self.spec_accepted += accepted
             self._adapt_proposed += n_prop[i]
             self._adapt_accepted += accepted
             done, n_rec = False, 0
             for tok in emitted:
                 n_rec += 1
-                self.spec_emitted += 1
                 if self._record(i, req, int(tok)):
                     done = True          # EOS or max_new: rest discarded
                     break
+            # One spec_verify event per (slot, tick): its payload carries
+            # the accept accounting (the spec_* counters are aggregates
+            # over these events).
+            tel.emit(self.ticks, "spec_verify", rid=req.rid, slot=i,
+                     proposed=n_prop[i], accepted=accepted, emitted=n_rec)
             if not done:
                 # Live rows gained: the pending token plus n_rec - 1
                 # accepted drafts (the last emitted token is the unwritten

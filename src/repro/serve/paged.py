@@ -111,6 +111,11 @@ class PageAllocator:
         self.slot_pages: Dict[int, List[int]] = {}
         self._live: set = set()
         self.high_water = 0
+        # Cumulative churn counters (never decremented): post-run pool
+        # sizing audits need total traffic, not just the instantaneous
+        # occupancy — conservation law: allocated - freed == in use.
+        self.pages_allocated = 0
+        self.pages_freed = 0
 
     # -- device geometry ------------------------------------------------------
 
@@ -167,6 +172,7 @@ class PageAllocator:
             assert p != NULL_PAGE and p not in self._live, p
             self._live.add(p)
         self.slot_pages.setdefault(slot, []).extend(got)
+        self.pages_allocated += len(got)
         self.high_water = max(self.high_water, self.pages_in_use)
         return got
 
@@ -179,6 +185,7 @@ class PageAllocator:
         # Reversed: re-admission walks pages in allocation order again.
         for p in reversed(pages):
             self._free_by_dev[self.device_of(p)].append(p)
+        self.pages_freed += len(pages)
         return pages
 
     def reset(self) -> None:
@@ -212,6 +219,8 @@ class PageAllocator:
             "pages_in_use": self.pages_in_use,
             "pages_free": self.free_pages,
             "high_water": self.high_water,
+            "pages_allocated": self.pages_allocated,
+            "pages_freed": self.pages_freed,
             "utilization": self.pages_in_use / max(1, self.capacity),
             "rows_resident": self.rows_resident(),
         }

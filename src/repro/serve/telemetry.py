@@ -1,0 +1,420 @@
+"""Structured observability for the serving engine (paper ethos: observe).
+
+The source paper dissects Volta by instrumenting tight loops and reading
+the clocks; this module applies the same probe-and-compare discipline to
+our own serving stack. Three surfaces, one bookkeeping home:
+
+  * **Event trace** — a ring-buffered, schema-versioned stream of typed
+    tick events (``admit``, ``shed``, ``preempt``, ``degrade_enter`` /
+    ``degrade_exit``, ``spec_verify`` with accept counts,
+    ``prefill_chunk``, ``page_alloc`` / ``page_free``, ``probe_tick``,
+    terminal outcomes) emitted from the engine's existing decision
+    points. The legacy ad-hoc counters (``admission_rejections``,
+    ``shed_by_class``, ``preemption_log``, spec stats) are *views over
+    this trace's aggregates*, not parallel bookkeeping: the aggregate
+    side of ``emit`` runs even when tracing is disabled (and even after
+    ring eviction), so the counters stay exact while the ring bounds
+    memory.
+  * **Wall-clock spans** — ``perf_counter`` spans around the decode /
+    verify / chunk executables and the host-side scheduling phases, with
+    trace-vs-execute separation (the first call of each executable is
+    flagged ``compile`` via the engine's trace-time counters — exact,
+    not heuristic), plus a per-tick wall-time histogram (p50/p99). Spans
+    measure *host-observed* time: dispatch plus whatever synchronization
+    the engine already performs. No device syncs or host<->device
+    transfers are added anywhere — instrumentation is purely
+    observational and the traced engine's token streams are bit-identical
+    to an untraced engine's (gated by tests/test_telemetry.py).
+  * **Exporters** — ``chrome_trace()`` emits a Chrome-trace/Perfetto JSON
+    timeline (one track per engine phase, one per slot; load it at
+    ``ui.perfetto.dev`` or ``chrome://tracing``); ``metrics()`` flattens
+    everything into one scalar dict for operator reports and bench cells.
+
+``drift_report`` is the model-vs-measured gate: it compares the
+``core.autotune`` cost-model predictions (``paged_decode_model``,
+``prefill_chunk_model``, ``spec_decode_model``) against the measured
+execute-phase spans for the same configuration — the direct on-ramp for
+the ROADMAP's microbenchmark-calibrated cost models. On a CPU test
+backend the ratios are far from 1 (the models price TPU HBM streams);
+the gate is that they are *finite, positive, and recorded*.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+TRACE_SCHEMA_VERSION = 1
+
+# Typed event kinds (schema v1). ``emit`` asserts membership so a typo'd
+# kind fails loudly in tests instead of minting an unqueryable stream.
+EVENT_KINDS = frozenset({
+    "submit",         # request entered the queue
+    "admit",          # request installed into a slot
+    "admit_hold",     # pool-exhausted admission hold (everyone waits)
+    "shed",           # terminal: clean reject (queue_full/capacity/...)
+    "finish",         # terminal: done | forced:* (partial stream kept)
+    "preempt",        # slot evicted back to the queue
+    "degrade_enter",  # ladder: clean -> degraded transition
+    "degrade_exit",   # ladder: degraded -> clean transition
+    "spec_verify",    # one slot's verify outcome (proposed/accepted)
+    "prefill_chunk",  # one prompt chunk written through the page table
+    "page_alloc",     # pages granted to a slot
+    "page_free",      # a freed slot's pages returned to the pool
+    "probe_tick",     # k=1 trial tick while speculation is disabled
+})
+
+
+class _Span:
+    """Context manager recording one wall-clock span. ``compile`` is set
+    by the caller from the engine's trace-time counter delta (exact
+    first-call detection); it must be assigned *inside* the block."""
+
+    __slots__ = ("_tel", "name", "tick", "slot", "compile", "_t0")
+
+    def __init__(self, tel: "Telemetry", name: str, tick: int,
+                 slot: Optional[int]):
+        self._tel = tel
+        self.name = name
+        self.tick = tick
+        self.slot = slot
+        self.compile = False
+
+    def __enter__(self) -> "_Span":
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._tel._record_span(self, self._t0,
+                               time.perf_counter() - self._t0)
+
+
+class _NullSpan:
+    """Shared no-op span for disabled telemetry (zero per-call garbage)."""
+
+    __slots__ = ("compile",)
+
+    def __init__(self):
+        self.compile = False
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        pass
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class Telemetry:
+    """One engine's observability state: event ring + aggregates + spans.
+
+    Aggregates (``counters``, ``shed_by_class``, ``preemption_log``) are
+    updated by every ``emit``/``count`` call regardless of ``enabled`` —
+    they are the backing store for the engine's legacy counter views and
+    must stay exact. The *ring buffers* (events, spans, tick times) and
+    the ``perf_counter`` reads are what ``enabled`` gates: a disabled
+    engine pays only dict arithmetic.
+    """
+
+    def __init__(self, enabled: bool = True, capacity: int = 4096):
+        assert capacity >= 1, capacity
+        self.enabled = enabled
+        self.capacity = capacity
+        self.schema_version = TRACE_SCHEMA_VERSION
+        # Ring entries: (t_rel_s, tick, kind, payload_dict).
+        self.events: deque = deque(maxlen=capacity)
+        # Ring entries: (name, t0_rel_s, dur_s, tick, slot, compile).
+        self.spans: deque = deque(maxlen=capacity)
+        # Ring entries: (tick, dur_s) — percentile window.
+        self.tick_times: deque = deque(maxlen=capacity)
+        self.dropped_events = 0          # ring evictions (aggregates exact)
+        # Aggregates (exact over the whole run, never evicted):
+        self.counters: Dict[str, Any] = {}
+        self.shed_by_class: Dict[str, int] = {}
+        self.preemption_log: List[Tuple[int, str, int]] = []
+        # name -> [n, total_s, max_s, compile_n, compile_s]
+        self._span_agg: Dict[str, List] = {}
+        self._tick_n = 0
+        self._tick_total_s = 0.0
+        self._epoch = time.perf_counter()
+
+    # -- recording ------------------------------------------------------------
+
+    def count(self, key: str, n: int = 1) -> None:
+        """Bump an aggregate counter with no ring event (high-frequency
+        accounting like per-tick context-row sums)."""
+        self.counters[key] = self.counters.get(key, 0) + n
+
+    def emit(self, tick: int, kind: str, **payload) -> None:
+        """Record one typed event. Aggregates always update; the ring
+        entry is appended only when tracing is enabled."""
+        assert kind in EVENT_KINDS, kind
+        # .item(): numpy scalars (token counts, lengths) must not leak
+        # into the aggregates or the ring — chrome_trace()/metrics()
+        # json-serialize these as-is.
+        payload = {k: (v.item() if hasattr(v, "item") else v)
+                   for k, v in payload.items()}
+        c = self.counters
+        c[kind] = c.get(kind, 0) + 1
+        if kind == "shed":
+            rc = payload["rclass"]
+            self.shed_by_class[rc] = self.shed_by_class.get(rc, 0) + 1
+        elif kind == "preempt":
+            self.preemption_log.append(
+                (payload["rid"], payload["rclass"], payload["n_generated"]))
+        elif kind == "spec_verify":
+            c["spec_proposed"] = c.get("spec_proposed", 0) \
+                + payload["proposed"]
+            c["spec_accepted"] = c.get("spec_accepted", 0) \
+                + payload["accepted"]
+            c["spec_emitted"] = c.get("spec_emitted", 0) \
+                + payload["emitted"]
+        if not self.enabled:
+            return
+        if len(self.events) == self.capacity:
+            self.dropped_events += 1
+        self.events.append(
+            (time.perf_counter() - self._epoch, tick, kind, payload))
+
+    def span(self, name: str, tick: int,
+             slot: Optional[int] = None):
+        """Wall-clock span context manager; no-op when disabled."""
+        if not self.enabled:
+            return _NULL_SPAN
+        return _Span(self, name, tick, slot)
+
+    def _record_span(self, sp: _Span, t0: float, dur: float) -> None:
+        agg = self._span_agg.get(sp.name)
+        if agg is None:
+            agg = self._span_agg[sp.name] = [0, 0.0, 0.0, 0, 0.0]
+        agg[0] += 1
+        agg[1] += dur
+        agg[2] = max(agg[2], dur)
+        if sp.compile:
+            agg[3] += 1
+            agg[4] += dur
+        self.spans.append((sp.name, t0 - self._epoch, dur, sp.tick,
+                           sp.slot, sp.compile))
+
+    def clock(self) -> float:
+        """Tick-start timestamp (0.0 when disabled — tick_done ignores)."""
+        return time.perf_counter() if self.enabled else 0.0
+
+    def tick_done(self, tick: int, t0: float) -> None:
+        """Close the whole-tick wall span opened by ``clock()``."""
+        if not self.enabled:
+            return
+        dur = time.perf_counter() - t0
+        self._tick_n += 1
+        self._tick_total_s += dur
+        self.tick_times.append((tick, dur))
+
+    def reset(self) -> None:
+        """Drop everything — rings, aggregates, epoch. The bench warm-up
+        boundary: compile spans and warm-up events must not pollute the
+        measured cells."""
+        self.events.clear()
+        self.spans.clear()
+        self.tick_times.clear()
+        self.dropped_events = 0
+        self.counters.clear()
+        self.shed_by_class.clear()
+        self.preemption_log.clear()
+        self._span_agg.clear()
+        self._tick_n = 0
+        self._tick_total_s = 0.0
+        self._epoch = time.perf_counter()
+
+    # -- queries --------------------------------------------------------------
+
+    def events_of(self, kind: Optional[str] = None) -> List[Tuple]:
+        """Ring events, optionally filtered by kind (recent window only —
+        use the aggregates for exact whole-run totals)."""
+        if kind is None:
+            return list(self.events)
+        assert kind in EVENT_KINDS, kind
+        return [e for e in self.events if e[2] == kind]
+
+    def tick_stats(self) -> Dict[str, float]:
+        """Whole-tick wall-time histogram. ``mean_s``/``total_s`` are
+        exact over the run; percentiles cover the ring window."""
+        if not self._tick_n:
+            return {"n": 0, "total_s": 0.0, "mean_s": 0.0,
+                    "p50_s": 0.0, "p99_s": 0.0, "max_s": 0.0}
+        durs = [d for _, d in self.tick_times]
+        return {"n": self._tick_n,
+                "total_s": self._tick_total_s,
+                "mean_s": self._tick_total_s / self._tick_n,
+                "p50_s": float(np.percentile(durs, 50)),
+                "p99_s": float(np.percentile(durs, 99)),
+                "max_s": float(max(durs))}
+
+    def span_stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-span-name aggregates with trace-vs-execute separation:
+        ``compile_*`` isolates first-call (tracing+compile) cost,
+        ``execute_mean_s`` is the steady-state mean the cost models are
+        judged against."""
+        out = {}
+        for name, (n, total, mx, cn, cs) in self._span_agg.items():
+            en = n - cn
+            out[name] = {
+                "n": n, "total_s": total, "mean_s": total / n, "max_s": mx,
+                "compile_n": cn, "compile_s": cs, "execute_n": en,
+                "execute_mean_s": (total - cs) / en if en else 0.0,
+            }
+        return out
+
+    # -- exporters ------------------------------------------------------------
+
+    def metrics(self) -> Dict[str, Any]:
+        """Everything as one flat scalar dict (operator reports, bench
+        cells). Keys: ``count_*`` aggregates, ``tick_*`` histogram,
+        ``span_<name>_*`` per-span stats."""
+        out: Dict[str, Any] = {
+            "schema_version": self.schema_version,
+            "enabled": self.enabled,
+            "events_in_ring": len(self.events),
+            "events_dropped": self.dropped_events,
+        }
+        for k in sorted(self.counters):
+            out[f"count_{k}"] = self.counters[k]
+        for k, v in self.tick_stats().items():
+            out[f"tick_{k}"] = v
+        for name, st in sorted(self.span_stats().items()):
+            out[f"span_{name}_n"] = st["n"]
+            out[f"span_{name}_mean_s"] = st["mean_s"]
+            out[f"span_{name}_compile_n"] = st["compile_n"]
+            out[f"span_{name}_execute_mean_s"] = st["execute_mean_s"]
+        return out
+
+    def chrome_trace(self) -> Dict[str, Any]:
+        """Chrome-trace/Perfetto JSON (the ``traceEvents`` array format).
+
+        One track (tid) per engine phase (``phase:decode``, ...) carries
+        the wall-clock spans as complete events (ph="X"); per-slot tracks
+        (``slot:0``, ...) carry slot-attributed spans (prefill chunks)
+        and the decision events as instants (ph="i"). Timestamps are
+        microseconds relative to the telemetry epoch. Write with
+        ``json.dump`` and open at ui.perfetto.dev or chrome://tracing."""
+        tev = []
+        for name, t0, dur, tick, slot, comp in self.spans:
+            tid = f"slot:{slot}" if slot is not None else f"phase:{name}"
+            tev.append({"name": name, "ph": "X", "pid": 0, "tid": tid,
+                        "ts": t0 * 1e6, "dur": dur * 1e6,
+                        "args": {"tick": tick, "compile": comp}})
+        for t, tick, kind, payload in self.events:
+            slot = payload.get("slot")
+            tid = f"slot:{slot}" if slot is not None else "phase:events"
+            tev.append({"name": kind, "ph": "i", "s": "t", "pid": 0,
+                        "tid": tid, "ts": t * 1e6,
+                        "args": dict(payload, tick=tick)})
+        return {"traceEvents": tev, "displayTimeUnit": "ms",
+                "otherData": {"schema_version": self.schema_version}}
+
+
+# -- model-vs-measured drift gate ---------------------------------------------
+
+
+def drift_report(engine, persist: bool = False) -> Dict[str, Any]:
+    """Compare the autotune cost models against measured execute spans
+    for this engine's own configuration (paged engines only).
+
+    Components (present when the engine measured execute-phase spans for
+    them):
+
+      * ``decode`` — measured mean plain-decode span vs
+        ``paged_decode_model(...)["paged_s"]`` at the run's mean context
+        length and active-slot count (tracked host-side per tick, no
+        device syncs).
+      * ``prefill_chunk`` — measured mean chunk span vs
+        ``prefill_chunk_model(...)["prefill_s"]`` for one chunk.
+      * ``spec_verify`` — measured mean verify span vs
+        ``spec_decode_model(...)["spec_tick_s"]`` at the measured accept
+        rate.
+
+    Each component carries ``measured_s``, ``modeled_s`` and ``ratio``
+    (= measured/modeled, ``autotune.drift_ratio``). With ``persist=True``
+    the measurements are written into the persistent tuning cache under
+    the ``serve_measured:`` key namespace — the substrate the calibration
+    pass will read instead of the hand-set constants.
+    """
+    from repro.core import autotune
+    from repro.models import transformer as T
+
+    assert engine.pool is not None, "drift_report needs a paged engine"
+    tel = engine.telemetry
+    cfg, scfg = engine.cfg, engine.scfg
+    stats = tel.span_stats()
+    c = tel.counters
+
+    def mean_geom(rows_key: str, slots_key: str, n_spans: int):
+        slot_ticks = c.get(slots_key, 0)
+        rows = c.get(rows_key, 0)
+        mean_len = max(1, int(round(rows / max(1, slot_ticks))))
+        mean_slots = max(1, int(round(slot_ticks / max(1, n_spans))))
+        return mean_len, mean_slots
+
+    out: Dict[str, Any] = {"schema_version": TRACE_SCHEMA_VERSION}
+    geom = dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.dhead, page_size=scfg.page_size)
+
+    dec = stats.get("decode")
+    if dec and dec["execute_n"]:
+        mean_len, mean_slots = mean_geom(
+            "decode_context_rows", "decode_slot_ticks", dec["n"])
+        modeled = autotune.paged_decode_model(
+            scfg.max_len, [mean_len] * mean_slots, **geom)["paged_s"]
+        measured = dec["execute_mean_s"]
+        out["decode"] = {
+            "measured_s": measured, "modeled_s": modeled,
+            "ratio": autotune.drift_ratio(measured, modeled),
+            "n_spans": dec["execute_n"], "mean_context": mean_len,
+            "mean_slots": mean_slots}
+
+    pc = stats.get("prefill_chunk")
+    if pc and pc["execute_n"]:
+        modeled = autotune.prefill_chunk_model(
+            engine.chunk, engine.chunk, **geom)["prefill_s"]
+        measured = pc["execute_mean_s"]
+        out["prefill_chunk"] = {
+            "measured_s": measured, "modeled_s": modeled,
+            "ratio": autotune.drift_ratio(measured, modeled),
+            "n_spans": pc["execute_n"], "chunk": engine.chunk}
+
+    sv = stats.get("spec_verify")
+    if sv and sv["execute_n"] and engine.spec_k:
+        mean_len, mean_slots = mean_geom(
+            "verify_context_rows", "verify_slot_ticks", sv["n"])
+        proposed = c.get("spec_proposed", 0)
+        rate = c.get("spec_accepted", 0) / proposed if proposed else 0.0
+        modeled = autotune.spec_decode_model(
+            [mean_len] * mean_slots, k=engine.spec_k, accept_rate=rate,
+            param_bytes=T.active_param_count(cfg) * 2.0,
+            **geom)["spec_tick_s"]
+        measured = sv["execute_mean_s"]
+        out["spec_verify"] = {
+            "measured_s": measured, "modeled_s": modeled,
+            "ratio": autotune.drift_ratio(measured, modeled),
+            "n_spans": sv["execute_n"], "spec_k": engine.spec_k,
+            "accept_rate": rate}
+
+    if persist:
+        ident = (f"{cfg.n_heads}h{cfg.n_kv_heads}kv{cfg.dhead}d"
+                 f":page{scfg.page_size}:chunk{engine.chunk}")
+        for comp in ("decode", "prefill_chunk", "spec_verify"):
+            cell = out.get(comp)
+            if cell is None:
+                continue
+            autotune.record_serve_measurement(f"{comp}:{ident}", {
+                "time_s": cell["measured_s"],
+                "modeled_s": cell["modeled_s"],
+                "ratio": cell["ratio"],
+                "n": cell["n_spans"],
+                "source": "serve.telemetry",
+            })
+    return out

@@ -66,11 +66,20 @@ class TrafficClass:
     prompt_hi: int = 64
     out_lo: int = 4
     out_hi: int = 32
+    # Wall-clock SLO targets (milliseconds), reported by ``summarize``
+    # when the engine carries measured tick times (``serve.telemetry``).
+    # Tick-domain targets (engine ``SLOClass``) remain the default: they
+    # are deterministic and hardware-independent; these price the same
+    # latencies on the machine actually serving.
+    ttft_ms: Optional[float] = None
+    tpot_ms: Optional[float] = None
 
     def __post_init__(self):
         assert self.weight > 0, self.weight
         assert 1 <= self.prompt_lo <= self.prompt_hi
         assert 1 <= self.out_lo <= self.out_hi
+        assert self.ttft_ms is None or self.ttft_ms > 0
+        assert self.tpot_ms is None or self.tpot_ms > 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -204,8 +213,10 @@ def _pct(xs: List[float], q: float) -> float:
         if xs else float("nan")
 
 
-def summarize(engine, arrivals: List[Arrival]) -> Dict[str, object]:
-    """The operator-facing rollup, all in the tick domain.
+def summarize(engine, arrivals: List[Arrival],
+              classes: Optional[Tuple[TrafficClass, ...]] = None
+              ) -> Dict[str, object]:
+    """The operator-facing rollup, tick domain first, wall-clock second.
 
     * TTFT: first-token tick minus submit tick (queueing + prefill).
     * TPOT: inter-token interval over the decode phase,
@@ -214,6 +225,14 @@ def summarize(engine, arrivals: List[Arrival]) -> Dict[str, object]:
       requests only, so shed/preempted-to-death work doesn't count.
     * per class: the same plus SLO attainment against the engine's
       ``SLOClass`` targets when they are set.
+    * wall-clock: when the engine's telemetry measured tick times
+      (``serve.telemetry``, default-on), the summary adds the tick-time
+      histogram (``tick_wall_s_*``) and millisecond latency percentiles
+      (tick-domain latency x mean measured tick). Pass the traffic
+      ``classes`` to also report attainment against any ``ttft_ms`` /
+      ``tpot_ms`` targets they carry — the carried-over ROADMAP item:
+      SLOs priced in milliseconds on the machine actually serving, not
+      just in ticks.
     """
     by_class: Dict[str, List[Arrival]] = {}
     for a in arrivals:
@@ -222,13 +241,22 @@ def summarize(engine, arrivals: List[Arrival]) -> Dict[str, object]:
     done_tokens = sum(len(v) for r, v in engine.finished.items()
                       if engine.outcome.get(r) == "done")
     all_tokens = sum(len(v) for v in engine.finished.values())
+    tel = getattr(engine, "telemetry", None)
+    tstats = tel.tick_stats() if tel is not None else {"n": 0}
+    # ticks -> milliseconds via the measured mean tick time. None when
+    # nothing was measured (telemetry disabled): the ms fields are then
+    # simply absent rather than fabricated.
+    tick_ms = tstats["mean_s"] * 1e3 if tstats["n"] else None
+    wall_cls = {c.name: c for c in (classes or ())}
 
     def roll(arrs: List[Arrival]) -> Dict[str, object]:
         ttfts, tpots = [], []
         n_done = n_forced = n_rejected = 0
         ttft_ok = tpot_ok = ttft_n = tpot_n = 0
+        ttft_ms_ok = tpot_ms_ok = ttft_ms_n = tpot_ms_n = 0
         for a in arrs:
             cls = engine._classes.get(a.rclass)
+            wcls = wall_cls.get(a.rclass)
             out = engine.outcome.get(a.rid, "")
             if out == "done":
                 n_done += 1
@@ -244,6 +272,10 @@ def summarize(engine, arrivals: List[Arrival]) -> Dict[str, object]:
                 if cls is not None and cls.ttft_slo is not None:
                     ttft_n += 1
                     ttft_ok += ttft <= cls.ttft_slo
+                if wcls is not None and wcls.ttft_ms is not None \
+                        and tick_ms is not None:
+                    ttft_ms_n += 1
+                    ttft_ms_ok += ttft * tick_ms <= wcls.ttft_ms
             fin = engine.finish_tick.get(a.rid)
             n_tok = len(engine.finished.get(a.rid, ()))
             if ft is not None and fin is not None and n_tok >= 2:
@@ -252,6 +284,10 @@ def summarize(engine, arrivals: List[Arrival]) -> Dict[str, object]:
                 if cls is not None and cls.tpot_slo is not None:
                     tpot_n += 1
                     tpot_ok += tpot <= cls.tpot_slo
+                if wcls is not None and wcls.tpot_ms is not None \
+                        and tick_ms is not None:
+                    tpot_ms_n += 1
+                    tpot_ms_ok += tpot * tick_ms <= wcls.tpot_ms
         out = {
             "offered": len(arrs),
             "done": n_done,
@@ -264,6 +300,15 @@ def summarize(engine, arrivals: List[Arrival]) -> Dict[str, object]:
             out["ttft_slo_attainment"] = ttft_ok / ttft_n
         if tpot_n:
             out["tpot_slo_attainment"] = tpot_ok / tpot_n
+        if tick_ms is not None:
+            out["ttft_ms_p50"] = out["ttft_p50"] * tick_ms
+            out["ttft_ms_p99"] = out["ttft_p99"] * tick_ms
+            out["tpot_ms_p50"] = out["tpot_p50"] * tick_ms
+            out["tpot_ms_p99"] = out["tpot_p99"] * tick_ms
+        if ttft_ms_n:
+            out["ttft_ms_slo_attainment"] = ttft_ms_ok / ttft_ms_n
+        if tpot_ms_n:
+            out["tpot_ms_slo_attainment"] = tpot_ms_ok / tpot_ms_n
         return out
 
     summary: Dict[str, object] = roll(arrivals)
@@ -280,4 +325,11 @@ def summarize(engine, arrivals: List[Arrival]) -> Dict[str, object]:
         "by_class": {name: roll(arrs)
                      for name, arrs in sorted(by_class.items())},
     })
+    if tstats["n"]:
+        summary.update({
+            "wall_s": tstats["total_s"],
+            "tick_wall_s_mean": tstats["mean_s"],
+            "tick_wall_s_p50": tstats["p50_s"],
+            "tick_wall_s_p99": tstats["p99_s"],
+        })
     return summary
