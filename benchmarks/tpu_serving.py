@@ -34,6 +34,15 @@ verify executable) and ``spec_decode_32k`` (modeled —
 overhead at production shape, including the regime where it returns k=0
 and disables speculation).
 
+Prefix caching adds two: ``prefix_cache_hit`` (measured — shared-prefix
+waves through the paged engine with the cache off then on: byte-identical
+streams, suffix-only TTFT for the four concurrent sharers, pool high
+water strictly below the uncached engine's, hit/COW counters reconciled
+against the allocator) and ``prefix_cache_32k`` (modeled —
+``autotune.choose_prefix_cache`` pricing suffix-only prefill plus the
+probe/COW tax at an 8k cached prefix on a 32k prompt, including the
+hit-rate-0 regime where it disables itself).
+
 Distributed serving adds the last two: ``tp_pool_capacity`` (measured —
 an 8-host-device subprocess runs the same request mix through the
 single-device and mesh-sharded engines: token-stream parity flag, page
@@ -63,6 +72,7 @@ import numpy as np
 from repro import configs
 from repro.core import autotune
 from repro.models import transformer as T
+from repro.serve import traffic
 from repro.serve.engine import (Request, ServeConfig, ServingEngine,
                                 greedy_generate)
 
@@ -319,6 +329,110 @@ def _modeled_paged() -> dict:
     return out
 
 
+PREFIX_LEN = 24
+
+
+def _measured_prefix() -> dict:
+    """prefix_cache_hit cell: session traffic (a two-session
+    ``TrafficClass``, 24-token shared prefixes, six arrivals) through
+    the paged engine with the prefix cache off then on. The first
+    arrival of each session publishes its prefix; the remaining sharers
+    ride it. The on-engine must emit byte-identical streams while
+    prefilling only each sharer's suffix — TTFT drops to the suffix
+    chunk count — and must hold strictly fewer pages at high water than
+    the off-engine: one resident copy per distinct prefix while the
+    sharers decode concurrently."""
+    cfg = configs.get_smoke(ARCH)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    arr = traffic.TrafficGenerator(traffic.TrafficConfig(
+        rate=1.0, n_requests=N_REQUESTS, seed=5, vocab=cfg.vocab,
+        classes=(traffic.TrafficClass(
+            "chat", sessions=2, prefix_len=PREFIX_LEN,
+            prompt_lo=4, prompt_hi=9, out_lo=MAX_NEW,
+            out_hi=MAX_NEW),))).arrivals()
+    first = {}
+    for a in arr:                             # session publishers
+        first.setdefault(a.prompt[:PREFIX_LEN].tobytes(), a.rid)
+    pubs = sorted(first.values())
+    sharers = [a.rid for a in arr if a.rid not in pubs]
+    by_rid = {a.rid: a for a in arr}
+    wrng = np.random.RandomState(9)
+
+    def run(on):
+        eng = ServingEngine(params, cfg, ServeConfig(
+            max_len=MAX_LEN, batch=BATCH, eos_id=-1, paged=True,
+            page_size=PAGE_SIZE, chunk_size=PAGE_SIZE, prefix_cache=on))
+        eng.submit(Request(rid=-1, prompt=wrng.randint(
+            2, cfg.vocab, PAGE_SIZE + 1).astype(np.int32), max_new=2))
+        eng.run_until_drained()               # warm the executables
+        if eng.prefix is not None:
+            eng.prefix.clear()                # timed run seeds its own
+        eng.pool.high_water = eng.pool.pages_in_use
+        for rid in pubs:
+            eng.submit(Request(rid=rid, prompt=by_rid[rid].prompt.copy(),
+                               max_new=MAX_NEW))
+        eng.run_until_drained()
+        t0 = eng.ticks
+        for rid in sharers:
+            eng.submit(Request(rid=rid, prompt=by_rid[rid].prompt.copy(),
+                               max_new=MAX_NEW))
+        # run_until_drained returns the cumulative finished dict — drop
+        # the warm-up rid (its prompt differs between the two runs).
+        streams = {rid: s for rid, s in eng.run_until_drained().items()
+                   if rid >= 0}
+        ttft = [eng.first_token_tick[rid] - t0 for rid in sharers]
+        return streams, sum(ttft) / len(ttft), eng
+
+    off_streams, ttft_off, eng_off = run(False)
+    on_streams, ttft_on, eng = run(True)
+    return {
+        "prefix_len": PREFIX_LEN,
+        "page_size": PAGE_SIZE,
+        "sessions": 2,
+        "publishers": len(pubs),
+        "sharers": len(sharers),
+        "stream_parity": on_streams == off_streams,
+        "ttft_ticks_uncached": ttft_off,
+        "ttft_ticks_hit": ttft_on,
+        "ttft_reduction": ttft_off / max(ttft_on, 1e-9),
+        "prefix_hits": eng.prefix_hits,
+        "prefix_misses": eng.prefix_misses,
+        "hit_pages": eng.prefix_hit_pages,
+        "cow_copies": eng.cow_copies,
+        "index_entries": len(eng.prefix),
+        "high_water_pages_uncached": eng_off.pool.high_water,
+        "high_water_pages_cached": eng.pool.high_water,
+        "reservation_ratio": (eng.pool.high_water
+                              / max(1, eng_off.pool.high_water)),
+        "counters_reconcile": (
+            eng.prefix_hit_pages == eng.pool.shared_mappings
+            and eng.cow_copies == eng.pool.cow_count),
+    }
+
+
+def _modeled_prefix() -> dict:
+    """prefix_cache_32k cell: ``autotune.choose_prefix_cache`` at
+    production shape — an 8k-row session prefix on a 32k prompt at 60%
+    hit rate: suffix-only prefill plus the COW split and probe tax vs
+    prefilling from row 0, and the disable regime (hit rate 0 must come
+    back off — the probe tax buys nothing)."""
+    cfg = configs.get_config(ARCH)
+    on, terms = autotune.choose_prefix_cache(
+        32768, prefix_rows=8192, hit_rate=0.6, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.dhead, page_size=256)
+    on_zero, _ = autotune.choose_prefix_cache(
+        32768, prefix_rows=8192, hit_rate=0.0, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.dhead, page_size=256)
+    out = dict(terms)
+    out.update({
+        "max_len": 32768,
+        "page_size": 256,
+        "enabled": on,
+        "enabled_at_zero_hit_rate": on_zero,
+    })
+    return out
+
+
 TP_DEVICES = 8
 
 _TP_SCRIPT = r"""
@@ -417,6 +531,8 @@ def run():
     ck = _modeled_chunked()
     sp = _measured_spec()
     sk = _modeled_spec()
+    pfx = _measured_prefix()
+    pfk = _modeled_prefix()
     tpm = _measured_tp()
     tpk = _modeled_tp()
     return [
@@ -452,6 +568,15 @@ def run():
          f"k={sk['chosen_k']};speedup={sk['speedup']:.2f}x;"
          f"accept={sk['accept_rate']:.2f};"
          f"k_low_accept={sk['k_at_low_accept_model_draft']}"),
+        ("prefix_cache_hit",
+         f"parity={pfx['stream_parity']};"
+         f"ttft={pfx['ttft_ticks_hit']:.1f}/{pfx['ttft_ticks_uncached']:.1f}t;"
+         f"reservation={pfx['reservation_ratio']:.2f};"
+         f"cow={pfx['cow_copies']}"),
+        ("prefix_cache_32k",
+         f"speedup={pfk['speedup']:.2f}x;"
+         f"ttft_frac_hit={pfk['ttft_frac_hit']:.2f};"
+         f"on={pfk['enabled']};zero_hit_on={pfk['enabled_at_zero_hit_rate']}"),
         ("tp_pool_capacity",
          f"parity={tpm['parity']};devices={tpm['n_devices']};"
          f"span={tpm['max_device_span']};"
@@ -473,6 +598,8 @@ def main():
                "prefill_chunked_32k": _modeled_chunked(),
                "spec_decode_accept": _measured_spec(),
                "spec_decode_32k": _modeled_spec(),
+               "prefix_cache_hit": _measured_prefix(),
+               "prefix_cache_32k": _modeled_prefix(),
                "tp_pool_capacity": _measured_tp(),
                "tp_decode_32k": _modeled_tp()}
     print(json.dumps(payload, indent=1))
@@ -499,6 +626,22 @@ def main():
     assert payload["spec_decode_32k"]["chosen_k"] >= 1
     assert payload["spec_decode_32k"]["speedup"] > 1.0
     assert payload["spec_decode_32k"]["k_at_low_accept_model_draft"] == 0
+    # Acceptance: cached admissions stream bit-identically to the
+    # uncached engine while prefilling only the suffix (TTFT strictly
+    # below uncached with >= 2 concurrent sharers), the shared pool's
+    # high water sits strictly below the uncached engine's, and the
+    # hit/COW telemetry reconciles with the allocator's refcount totals;
+    # the modeled cell speculates profitably at 60% hit rate and
+    # disables itself at hit rate 0 (the probe tax buys nothing).
+    pfx = payload["prefix_cache_hit"]
+    assert pfx["stream_parity"]
+    assert pfx["sharers"] >= 2 and pfx["prefix_hits"] >= 2
+    assert pfx["ttft_ticks_hit"] < pfx["ttft_ticks_uncached"]
+    assert pfx["reservation_ratio"] < 1.0
+    assert pfx["counters_reconcile"]
+    assert payload["prefix_cache_32k"]["enabled"]
+    assert payload["prefix_cache_32k"]["speedup"] > 1.0
+    assert not payload["prefix_cache_32k"]["enabled_at_zero_hit_rate"]
     # Acceptance: the mesh-sharded engine's streams are bit-identical to
     # the single-device engine's, a slot's page table spans devices, the
     # same n_pages gives the same capacity on either mesh, and each mesh

@@ -38,9 +38,12 @@ if [[ $# -eq 0 ]]; then
     # distributed engine: 8-device parity, the device-sharded page pool,
     # and the mesh-keyed tuning cache — its subprocess half needs 8 host
     # devices, hence the XLA_FLAGS (the in-process half is mesh-blind).
+    # test_prefix_cache gates the sharing contract: cached admissions
+    # must stream bit-identically to the uncached engine on every path.
     python -m pytest -x -q tests/test_serve.py tests/test_serve_paged.py \
         tests/test_serve_chunked.py tests/test_serve_spec.py \
-        tests/test_flash_decode.py tests/test_paged_kv.py
+        tests/test_flash_decode.py tests/test_paged_kv.py \
+        tests/test_prefix_cache.py
     XLA_FLAGS="--xla_force_host_platform_device_count=8" \
         python -m pytest -x -q ${MARK[@]+"${MARK[@]}"} \
         tests/test_serve_dist.py
@@ -59,6 +62,7 @@ if [[ $# -eq 0 ]]; then
              --ignore=tests/test_serve_spec.py
              --ignore=tests/test_flash_decode.py
              --ignore=tests/test_paged_kv.py
+             --ignore=tests/test_prefix_cache.py
              --ignore=tests/test_serve_dist.py
              --ignore=tests/test_serve_faults.py
              --ignore=tests/test_traffic.py

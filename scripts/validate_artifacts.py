@@ -115,6 +115,20 @@ def check_bench_serving(path: str) -> None:
                    "spec_decode_32k.speedup",
                    "spec_decode_32k.verify_overhead_frac",
                    "spec_decode_32k.k_at_low_accept_model_draft",
+                   "prefix_cache_hit.sharers",
+                   "prefix_cache_hit.prefix_hits",
+                   "prefix_cache_hit.hit_pages",
+                   "prefix_cache_hit.ttft_ticks_uncached",
+                   "prefix_cache_hit.ttft_ticks_hit",
+                   "prefix_cache_hit.ttft_reduction",
+                   "prefix_cache_hit.reservation_ratio",
+                   "prefix_cache_32k.hit_rate",
+                   "prefix_cache_32k.prefill_s_off",
+                   "prefix_cache_32k.prefill_s_hit",
+                   "prefix_cache_32k.probe_s",
+                   "prefix_cache_32k.cow_s",
+                   "prefix_cache_32k.speedup",
+                   "prefix_cache_32k.ttft_frac_hit",
                    "tp_pool_capacity.n_devices",
                    "tp_pool_capacity.capacity_1dev",
                    "tp_pool_capacity.capacity_tp",
@@ -151,6 +165,10 @@ def check_bench_serving(path: str) -> None:
                    "model_vs_measured.spec_verify.modeled_s",
                    "model_vs_measured.spec_verify.ratio"):
         require(path, obj, dotted)
+    require(path, obj, "prefix_cache_hit.stream_parity", bool)
+    require(path, obj, "prefix_cache_hit.counters_reconcile", bool)
+    require(path, obj, "prefix_cache_32k.enabled", bool)
+    require(path, obj, "prefix_cache_32k.enabled_at_zero_hit_rate", bool)
     require(path, obj, "tp_pool_capacity.parity", bool)
     require(path, obj, "breaking_point_faults.parity", bool)
     require(path, obj, "breaking_point_sweep.offered_rates", list)
@@ -188,6 +206,30 @@ def check_bench_serving(path: str) -> None:
             fail(path, "modeled spec decode speedup <= 1")
         if obj["spec_decode_32k"]["k_at_low_accept_model_draft"] != 0:
             fail(path, "choose_spec_k failed to disable at low accept")
+        # Prefix-cache acceptance: cached streams are bit-identical
+        # (parity *asserted*), >= 2 concurrent sharers saw suffix-only
+        # TTFT strictly below the uncached engine, the shared pool's
+        # high water sat strictly below it too, the hit/COW counters
+        # reconciled with the allocator, and the modeled cell enables
+        # profitably at 60% hit rate while disabling at hit rate 0.
+        pfx = obj["prefix_cache_hit"]
+        if pfx["stream_parity"] is not True:
+            fail(path, "prefix-cached streams diverged from uncached")
+        if pfx["sharers"] < 2 or pfx["prefix_hits"] < 2:
+            fail(path, "prefix cell ran < 2 sharers / hits")
+        if not pfx["ttft_ticks_hit"] < pfx["ttft_ticks_uncached"]:
+            fail(path, "cached TTFT not below uncached")
+        if not 0 < pfx["reservation_ratio"] < 1.0:
+            fail(path, "shared-pool reservation not below uncached")
+        if pfx["counters_reconcile"] is not True:
+            fail(path, "hit/COW telemetry out of sync with allocator")
+        pfk = obj["prefix_cache_32k"]
+        if pfk["enabled"] is not True or not pfk["speedup"] > 1.0:
+            fail(path, "choose_prefix_cache not profitable at hit=0.6")
+        if pfk["enabled_at_zero_hit_rate"] is not False:
+            fail(path, "choose_prefix_cache failed to disable at hit=0")
+        if not 0.0 < pfk["ttft_frac_hit"] < 1.0:
+            fail(path, "ttft_frac_hit outside (0, 1)")
         # Distributed-serving acceptance: the mesh engine's streams are
         # bit-identical (parity flag *asserted*, not assumed), a slot's
         # context spans >= 2 devices, same n_pages -> same capacity on

@@ -539,11 +539,16 @@ def paged_decode_model(max_len: int, lengths: Iterable[int], n_heads: int,
 # often — the MXU-efficiency side of the chunk-size trade).
 CHUNK_DISPATCH_S = 5e-6
 
+# Host-side cost of one prefix-index level: a blake2b digest over one
+# page of tokens plus a dict probe (``serve.paged.PrefixIndex``).
+PREFIX_HASH_S = 2e-6
+
 
 def prefill_chunk_model(prompt_len: int, chunk: int, n_heads: int,
                         n_kv_heads: int, head_dim: int, page_size: int,
                         in_bytes: int = 2,
                         page_lookup_s: float = PAGE_LOOKUP_S,
+                        cached_rows: int = 0,
                         tp: Optional[TPServe] = None,
                         tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU) -> dict:
     """Price chunked paged prefill of one ``prompt_len`` prompt at one
@@ -558,6 +563,14 @@ def prefill_chunk_model(prompt_len: int, chunk: int, n_heads: int,
     keep decode latency tight but pay the fixed costs per chunk and pad
     the q tile below the MXU edge.
 
+    ``cached_rows`` prices a prefix-cache hit (``ServeConfig.
+    prefix_cache``): prefill starts at the cached cursor — chunks below
+    it never run — while every remaining chunk still attends the full
+    cached prefix (its K/V pages are resident, mapped by refcount), and
+    a per-level hash-probe term charges the index walk. The shared-
+    prefix TTFT collapse this models is the headline win: suffix-only
+    compute, zero data movement for the hit.
+
     ``n_kv_heads`` is accepted for signature symmetry with
     ``paged_decode_model`` but does not change the traffic: the prefill
     grid (``flash_attention_paged``) is flattened over *q* heads, so K/V
@@ -571,10 +584,16 @@ def prefill_chunk_model(prompt_len: int, chunk: int, n_heads: int,
     _, attn_shard = _tp_shard(tp, n_heads)
     del n_kv_heads
     coll_per_chunk = _tp_collective_s(chunk, tp, in_bytes, tpu)
-    n_chunks = _ceil_div(prompt_len, chunk)
+    # A full-coverage hit still re-prefills the last row (the first
+    # token's logit must be sampled) — same clamp the engine applies.
+    cached_rows = max(0, min(int(cached_rows), prompt_len - 1))
+    probe_s = _ceil_div(cached_rows, page_size) * PREFIX_HASH_S
+    n_chunks = _ceil_div(prompt_len - cached_rows, chunk)
     attn_s, lookup_s, visited_total, worst_chunk_s = 0.0, 0.0, 0, 0.0
     for i in range(n_chunks):
-        skv = min((i + 1) * chunk, prompt_len)     # live rows after chunk i
+        # live rows after chunk i (cached prefix included: its pages are
+        # resident and every suffix chunk attends them)
+        skv = min(cached_rows + (i + 1) * chunk, prompt_len)
         p = AttnProblem(sq=chunk, skv=max(skv, chunk), n_heads=n_heads,
                         head_dim=head_dim, causal=True, in_bytes=in_bytes)
         c, _ = choose_attn_block(p, tpu, use_cache=False)
@@ -591,10 +610,13 @@ def prefill_chunk_model(prompt_len: int, chunk: int, n_heads: int,
         visited_total += visited
         worst_chunk_s = max(worst_chunk_s, chunk_s)
     collective_s = n_chunks * coll_per_chunk
-    total_s = attn_s + lookup_s + n_chunks * CHUNK_DISPATCH_S + collective_s
+    total_s = attn_s + lookup_s + n_chunks * CHUNK_DISPATCH_S \
+        + collective_s + probe_s
     return {
         "chunk": chunk,
         "n_chunks": n_chunks,
+        "cached_rows": cached_rows,
+        "probe_s": probe_s,
         "prefill_s": total_s,
         "attn_s": attn_s,
         "lookup_s": lookup_s,
@@ -642,6 +664,57 @@ def choose_prefill_chunk(max_len: int, n_heads: int, n_kv_heads: int,
             best, best_score, best_terms = cand, score, terms
     return best, dict(best_terms, score_s=best_score,
                       candidates=len(cands))
+
+
+def choose_prefix_cache(prompt_len: int, prefix_rows: int, hit_rate: float,
+                        n_heads: int, n_kv_heads: int, head_dim: int,
+                        page_size: int, chunk: Optional[int] = None,
+                        in_bytes: int = 2,
+                        tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU
+                        ) -> Tuple[bool, dict]:
+    """On/off policy for ``ServeConfig.prefix_cache``, priced by hit rate.
+
+    Expected per-request prefill cost with the cache on is a mixture:
+    ``hit_rate`` of admissions prefill only the suffix past
+    ``prefix_rows`` (plus the hash-probe walk and one copy-on-write page
+    split amortized per hit — the full-coverage clamp's eager split is
+    the worst case, so charging it on every hit is conservative);
+    misses pay the full prefill *plus* the probe that found nothing.
+    The cache wins when the mixture beats the uncached cost — at
+    ``hit_rate`` 0 the probe tax makes "off" the choice, which is the
+    policy's real content: everything else is monotone in the hit rate.
+    """
+    assert 0.0 <= hit_rate <= 1.0, hit_rate
+    prefix_rows = max(0, min(int(prefix_rows), int(prompt_len)))
+    if chunk is None:
+        chunk, _ = choose_prefill_chunk(prompt_len, n_heads, n_kv_heads,
+                                        head_dim, page_size,
+                                        in_bytes=in_bytes, tpu=tpu)
+    full = prefill_chunk_model(prompt_len, chunk, n_heads, n_kv_heads,
+                               head_dim, page_size, in_bytes=in_bytes,
+                               tpu=tpu)
+    hit = prefill_chunk_model(prompt_len, chunk, n_heads, n_kv_heads,
+                              head_dim, page_size, in_bytes=in_bytes,
+                              cached_rows=prefix_rows, tpu=tpu)
+    # One COW page split: read + write one page of K and V rows.
+    cow_s = 4 * page_size * n_kv_heads * head_dim * in_bytes \
+        / tpu.hbm_bandwidth
+    probe_s = _ceil_div(prompt_len, page_size) * PREFIX_HASH_S
+    on_s = hit_rate * (hit["prefill_s"] + cow_s) \
+        + (1.0 - hit_rate) * (full["prefill_s"] + probe_s)
+    off_s = full["prefill_s"]
+    return on_s < off_s, {
+        "hit_rate": hit_rate,
+        "prefix_rows": prefix_rows,
+        "chunk": chunk,
+        "prefill_s_off": off_s,
+        "prefill_s_on": on_s,
+        "prefill_s_hit": hit["prefill_s"],
+        "cow_s": cow_s,
+        "probe_s": probe_s,
+        "speedup": off_s / on_s if on_s else float("inf"),
+        "ttft_frac_hit": hit["prefill_s"] / off_s if off_s else 0.0,
+    }
 
 
 # Host-side cost of one n-gram-lookup drafted token (a numpy scan of the

@@ -60,10 +60,12 @@ def _parse_tenant(spec: str):
         prompt_lo=int(num("prompt-lo", 4)),
         prompt_hi=int(num("prompt-hi", 12)),
         out_lo=int(num("out-lo", 2)), out_hi=int(num("out-hi", 8)),
-        ttft_ms=num("ttft-ms"), tpot_ms=num("tpot-ms"))
+        ttft_ms=num("ttft-ms"), tpot_ms=num("tpot-ms"),
+        sessions=int(num("sessions", 0)),
+        prefix_len=int(num("prefix-len", 0)))
     known = {"priority", "ttft", "tpot", "rate", "burst", "weight",
              "prompt-lo", "prompt-hi", "out-lo", "out-hi",
-             "ttft-ms", "tpot-ms"}
+             "ttft-ms", "tpot-ms", "sessions", "prefix-len"}
     if set(kv) - known:
         raise SystemExit(f"--tenant unknown keys {sorted(set(kv) - known)}")
     return slo, tcls
@@ -84,6 +86,13 @@ def main(argv=None):
     ap.add_argument("--chunk-size", type=int, default=None,
                     help="prefill chunk rows (paged; page-size multiple); "
                          "default: the autotune chunk cost model's choice")
+    ap.add_argument("--prefix-cache", default=False,
+                    action=argparse.BooleanOptionalAction,
+                    help="share full-page-aligned prompt prefixes across "
+                         "requests through the page table (paged only; "
+                         "refcounted pages + copy-on-write — admission "
+                         "skips prefill for cached prefixes, streams stay "
+                         "bit-identical)")
     ap.add_argument("--pool-frac", type=float, default=1.0,
                     help="pool size as a fraction of the contiguous "
                          "batch*max_len reservation (>= 1.0 keeps the "
@@ -179,6 +188,9 @@ def main(argv=None):
                          "distributed engine is the KV page)")
     if args.rate is None and (args.tenant or args.faults):
         raise SystemExit("--tenant/--faults need --rate (traffic mode)")
+    if args.prefix_cache and not args.paged:
+        raise SystemExit("--prefix-cache needs --paged (sharing happens "
+                         "through the page table)")
     if args.spec_probe_every is not None and not args.spec_k:
         raise SystemExit("--spec-probe-every needs --spec-k")
 
@@ -197,7 +209,8 @@ def main(argv=None):
     scfg = ServeConfig(
         max_len=args.max_len, batch=args.batch, paged=args.paged,
         page_size=args.page_size, n_pages=n_pages,
-        chunk_size=args.chunk_size, spec_k=args.spec_k, draft=args.draft,
+        chunk_size=args.chunk_size, prefix_cache=args.prefix_cache,
+        spec_k=args.spec_k, draft=args.draft,
         classes=tuple(slo for slo, _ in tenants) or None,
         max_queue=args.max_queue, max_preemptions=args.max_preemptions,
         degrade=args.degrade,
@@ -275,6 +288,20 @@ def main(argv=None):
               f"freed, chunk={engine.chunk}, "
               f"{engine.admission_rejections} admission holds, "
               f"{engine.preemptions} preemptions")
+        if engine.prefix is not None:
+            # Prefix-cache operator report: sharing state of the live
+            # pool + cumulative hit/COW/eviction traffic. hit rate is
+            # over admissions that probed (hits + misses).
+            probes = engine.prefix_hits + engine.prefix_misses
+            hit_rate = engine.prefix_hits / probes if probes else 0.0
+            print(f"  prefix cache: {occ['pages_shared']} shared / "
+                  f"{occ['pages_exclusive']} exclusive / "
+                  f"{occ['pages_cached_idle']} cached-idle pages, "
+                  f"index {len(engine.prefix)} entries, "
+                  f"hit rate {hit_rate:.0%} ({engine.prefix_hits}/"
+                  f"{probes} admissions, {engine.prefix_hit_pages} pages "
+                  f"mapped), {occ['cow_count']} cow copies, "
+                  f"{engine.prefix.evicted_pages} evicted")
     if engine.spec_k:
         ticks = max(1, engine.spec_ticks)
         print(f"  spec: k={engine.spec_k} draft={args.draft} "

@@ -29,6 +29,15 @@ The engine never sees any of this: it keeps one flat allocator and one
 logical page table, and ``models.layers._paged_apply`` routes through
 these helpers only when the ambient ruleset (``dist.sharding``) carries a
 real mesh whose ``kv_pages`` axis is non-trivial.
+
+Prefix caching composes unchanged: refcounts and the prefix index are
+host-side state on the flat allocator, and a cache hit only installs
+already-resident page ids into another slot's table. A shared page lives
+on its owning device like any other; scatter/gather address pages by id,
+blind to how many tables map them. Copy-on-write allocates the fresh page
+wherever the allocator's least-loaded placement puts it — the copy is a
+device-local pool-to-pool row move expressed through the same donated
+cache update the engine already uses.
 """
 
 from __future__ import annotations

@@ -132,6 +132,15 @@ class ServeConfig:
     prefill_chunks_per_tick: Optional[int] = None  # per-tick prefill
     # chunk budget; None runs one chunk for *every* mid-prefill slot.
     # With a budget, the shortest-remaining-first order decides who runs.
+    prefix_cache: bool = False   # paged only: share full-page-aligned
+    # prompt prefixes across requests through the page table (refcounted
+    # pages + hash-keyed ``paged.PrefixIndex``). Admission maps cached
+    # pages into the new slot (zero data movement) and chunk-prefills
+    # only the uncached suffix; copy-on-write splits any shared page
+    # before a write could land in it; unreferenced cached prefixes are
+    # reclaimed LRU before preemption fires. Token streams stay
+    # bit-identical to an uncached engine on every path.
+    # ``core.autotune.choose_prefix_cache`` prices when to enable it.
     # -- overload robustness (all default-off: legacy behavior unchanged) --
     classes: Optional[Tuple[SLOClass, ...]] = None  # multi-tenant request
     # classes: admission runs highest-priority-first with per-class
@@ -341,7 +350,17 @@ class ServingEngine:
                 (chunk, serve_cfg.page_size, serve_cfg.max_len)
             self.chunk: Optional[int] = chunk
             self._chunk_fn = self._make_chunk_fn()
+            # Prefix cache: hash-keyed index over the pool's pages.
+            # Host-side only (refcounts + digests) — the device caches
+            # and kernels are untouched; sharing is purely which page
+            # ids appear in which slots' tables.
+            self.prefix: Optional[paged_mod.PrefixIndex] = \
+                paged_mod.PrefixIndex(self.pool) \
+                if serve_cfg.prefix_cache else None
         else:
+            assert not serve_cfg.prefix_cache, \
+                "prefix_cache requires paged=True (it shares pages)"
+            self.prefix = None
             self.pool = None
             self.chunk = None
             self.caches = T.init_caches(cfg, serve_cfg.batch,
@@ -371,6 +390,10 @@ class ServingEngine:
         self._prefilling: Dict[int, int] = {}   # slot -> prompt rows written
         self._prefill_wait: Dict[int, int] = {} # slot -> ticks since served
         self._slot_seq: Dict[int, int] = {}     # slot -> admission sequence
+        # Prefix-cache publish cursor per slot: (digest of the deepest
+        # published/matched prefix, pages published so far). Seeded at
+        # admission from the probe; advanced as prefill completes pages.
+        self._chain: Dict[int, Tuple[bytes, int]] = {}
         self._admit_seq = 0
         # -- overload-robustness accounting -----------------------------------
         self.submit_tick: Dict[int, int] = {}   # rid -> tick of submit()
@@ -440,6 +463,16 @@ class ServingEngine:
         "degrade_enter", "clean->degraded ladder transitions")
     degraded_ticks = _counter_view(
         "degraded_tick", "ticks spent in degraded mode")
+    prefix_hits = _counter_view(
+        "prefix_hit", "admissions that mapped cached prefix pages")
+    prefix_misses = _counter_view(
+        "prefix_miss", "admissions that probed the index and found none")
+    prefix_hit_pages = _counter_view(
+        "prefix_hit_pages", "cached pages mapped by admissions (sum)")
+    cow_copies = _counter_view(
+        "cow_copy", "copy-on-write splits of shared pages")
+    prefix_evictions = _counter_view(
+        "prefix_evict", "LRU reclaims of cached-idle prefix runs")
 
     @property
     def shed_by_class(self) -> Dict[str, int]:
@@ -647,14 +680,20 @@ class ServingEngine:
 
     # -- page-table plumbing --------------------------------------------------
 
-    def _append_pages(self, slot: int, pages: List[int]) -> None:
+    def _append_pages(self, slot: int, pages: List[int],
+                      fresh: bool = True) -> None:
         """Extend a slot's logical->physical map in every layer cache
         (entries [have, have+n) — chunked prefill and lazy decode growth
-        both append, never overwrite live entries)."""
+        both append, never overwrite live entries). ``fresh=False`` skips
+        the ``page_alloc`` event: a prefix-cache hit maps *existing*
+        pages (``pool.share``), traced by ``prefix_hit`` instead, so the
+        page_alloc event sum stays reconciled with the allocator's
+        ``pages_allocated``."""
         if not pages:
             return
-        self.telemetry.emit(self.ticks, "page_alloc", slot=slot,
-                            n=len(pages))
+        if fresh:
+            self.telemetry.emit(self.ticks, "page_alloc", slot=slot,
+                                n=len(pages))
         have = len(self.pool.slot_pages[slot]) - len(pages)
         cols = jnp.arange(have, have + len(pages))
         vals = jnp.asarray(pages, jnp.int32)
@@ -662,6 +701,81 @@ class ServingEngine:
             dict(c, pages=c["pages"].at[:, slot, cols].set(vals))
             for c in self.caches
         ]
+
+    # -- prefix cache (``paged.PrefixIndex``) ---------------------------------
+
+    def _cow_page(self, slot: int, pos: int) -> None:
+        """Copy-on-write split of slot table position ``pos``: allocate a
+        fresh page, copy the K/V rows on device, swap the table entry.
+        The one data-movement cost of sharing — ``page_size`` rows per
+        layer, paid only when a write would otherwise land in a page
+        another holder (slot or index) still reads."""
+        old, new = self.pool.cow(slot, pos)
+        self.telemetry.emit(self.ticks, "cow_copy", slot=slot,
+                            old=old, new=new, pos=pos)
+        self.caches = [
+            dict(c, kp=c["kp"].at[:, new].set(c["kp"][:, old]),
+                 vp=c["vp"].at[:, new].set(c["vp"][:, old]),
+                 pages=c["pages"].at[:, slot, pos].set(new))
+            for c in self.caches
+        ]
+
+    def _cow_range(self, slot: int, lo: int, hi: int) -> None:
+        """Split any *shared* page backing rows [lo, hi) before a write
+        lands there. In steady state this never fires — shared pages sit
+        strictly below every write cursor (hits are full pages below the
+        prefill cursor; published pages are full pages below the decode
+        position) — except the one admission case ``_admit`` handles
+        eagerly. Kept as the write-barrier invariant: *no* write path
+        may touch a page with refcount >= 2."""
+        if self.prefix is None:
+            return
+        held = self.pool.slot_pages.get(slot, ())
+        ps = self.scfg.page_size
+        for pos in range(lo // ps, min((max(hi, lo + 1) - 1) // ps,
+                                       len(held) - 1) + 1):
+            if self.pool.refcount(held[pos]) >= 2:
+                self._cow_page(slot, pos)
+
+    def _publish_rows(self, slot: int, req: Request, rows: int) -> None:
+        """Advance ``slot``'s publish chain: register every *full* page
+        of the effective prompt below ``rows`` (rows actually written)
+        with the prefix index. Generated-token pages are never published
+        (they sit at the live write cursor); a published page is always
+        strictly below every later write position, so its content is
+        frozen for the lifetime of the index's hold."""
+        if self.prefix is None or slot not in self._chain:
+            return
+        ps = self.scfg.page_size
+        digest, done = self._chain[slot]
+        limit = min(int(rows), self._effective_len(req)) // ps
+        if limit <= done:
+            return
+        prompt = self._effective_prompt(req)
+        held = self.pool.slot_pages.get(slot, ())
+        for j in range(done, min(limit, len(held))):
+            nxt = self.prefix.publish(prompt[j * ps:(j + 1) * ps],
+                                      held[j], digest, now=self.ticks)
+            if nxt is None:      # digest collision: stop the chain here
+                break
+            digest, done = nxt, j + 1
+        self._chain[slot] = (digest, done)
+
+    def _evict_prefixes(self, need: int) -> bool:
+        """Reclaim cached-idle prefix pages (LRU) until ``need`` pages
+        are allocatable. Runs *before* any preemption: dropping an idle
+        cache entry costs a future prefill at most, evicting a live slot
+        costs re-prefilling work already paid for. Returns True when the
+        pool can now satisfy ``need``."""
+        if self.prefix is None:
+            return self.pool.can_alloc(need)
+        while not self.pool.can_alloc(need):
+            short = need - self.pool.free_pages
+            n = self.prefix.evict(short, now=self.ticks)
+            if not n:
+                break
+            self.telemetry.emit(self.ticks, "prefix_evict", n=n)
+        return self.pool.can_alloc(need)
 
     def _pages_through_tick(self, slot: Request) -> int:
         """Table entries ``slot`` must have for this tick's decode write.
@@ -692,8 +806,21 @@ class ServingEngine:
         if self.pool is None:
             return
         for i, slot in enumerate(self.slots):
-            if slot is None or i in self._prefilling:
+            if slot is None:
                 continue
+            if i in self._prefilling:
+                # Mid-prefill slots ride the batched decode step too —
+                # their (reset) write cursor takes 1 + spec_k dead rows
+                # this tick. Width-aware write barrier: split any shared
+                # page those rows could touch (never fires in steady
+                # state — the cursor sits at/above every shared page).
+                cur = self._prefilling[i]
+                self._cow_range(i, cur, cur + 1 + self.spec_k)
+                continue
+            # Decode write barrier: this tick writes rows
+            # [eff_len - 1, eff_len + spec_k) (spec drafts included).
+            eff = self._effective_len(slot)
+            self._cow_range(i, max(0, eff - 1), eff + self.spec_k)
             target = self._pages_through_tick(slot)
             while len(self.pool.slot_pages.get(i, ())) < target:
                 if not self._preempt_for(1, protect={i}):
@@ -759,6 +886,10 @@ class ServingEngine:
         stall, a self-preemption, or a crash)."""
         if self.pool is None:
             return False
+        # Cached-idle prefix pages are the cheapest pages in the pool:
+        # reclaim them (LRU) before any live stream is evicted.
+        if self._evict_prefixes(need):
+            return True
         while not self.pool.can_alloc(need):
             victims = [i for i, s in enumerate(self.slots)
                        if s is not None and i not in protect]
@@ -974,7 +1105,12 @@ class ServingEngine:
         self._prefilling.pop(i, None)
         self._prefill_wait.pop(i, None)
         self._slot_seq.pop(i, None)
+        self._chain.pop(i, None)
         if self.pool is not None:
+            # Refcounted: only pages whose last holder left are freed —
+            # pages the prefix index (or a co-sharing slot) still holds
+            # stay resident, so ``page_free`` sizes keep reconciling with
+            # the allocator's ``pages_freed``.
             freed = self.pool.free_slot(i)
             if freed:
                 self.telemetry.emit(self.ticks, "page_free", slot=i,
@@ -1056,9 +1192,39 @@ class ServingEngine:
                             f"request {req.rid}: needs {with_decode} pages "
                             f"but the pool holds {self.pool.capacity}; "
                             f"raise n_pages or page_size")
-                    first = paged_mod.chunk_page_need(
-                        0, min(self.chunk, plen), 0, ps, self.scfg.max_len)
-                    if not self.pool.can_alloc(
+                    # Prefix-cache probe: the longest cached full-page
+                    # prefix of the effective prompt. A full-coverage
+                    # hit (page-aligned prompt entirely cached) still
+                    # re-prefills the *last* row — the sampled first
+                    # token needs its logit — so the cursor is clamped
+                    # to plen - 1 and the page that row lands in is
+                    # split eagerly (copy-on-write) below: the batched
+                    # decode step would otherwise scribble dead rows
+                    # into a page other holders read.
+                    hit_pages: List[int] = []
+                    hit_digest = paged_mod.ROOT_DIGEST
+                    n_hit = 0
+                    if self.prefix is not None:
+                        hit_pages, hit_digest, n_hit = self.prefix.probe(
+                            self._effective_prompt(req), plen // ps,
+                            now=self.ticks)
+                    cursor = min(n_hit * ps, plen - 1)
+                    cow_at = (n_hit - 1) if n_hit * ps > cursor else None
+                    # Unified admission pricing (bugfix): reserve the
+                    # *first uncached chunk* only — cursor starts at the
+                    # cached rows and the hit pages count as held — so a
+                    # mostly-cached long prompt is admittable on a
+                    # nearly-full pool instead of being priced as if it
+                    # prefilled from row 0. (+1 page when the clamped
+                    # cursor forces the eager copy-on-write split.)
+                    suffix_need = paged_mod.chunk_page_need(
+                        cursor, min(self.chunk, plen - cursor), n_hit, ps,
+                        self.scfg.max_len)
+                    first = suffix_need + (1 if cow_at is not None else 0)
+                    # Cached-idle prefixes are reclaimed (LRU) before
+                    # this turns into a hold — an idle cache entry never
+                    # blocks a live admission.
+                    if not self._evict_prefixes(
                             first + self._imminent_page_need()):
                         self.telemetry.emit(
                             self.ticks, "admit_hold", rid=req.rid,
@@ -1070,14 +1236,30 @@ class ServingEngine:
                     self.slots[i] = req
                     if req.preempt_count:
                         req.readmitted_at = self.ticks   # storm guard
-                    self._prefilling[i] = 0
+                    self._prefilling[i] = cursor
                     self._slot_seq[i] = self._admit_seq
                     self._admit_seq += 1
                     self.telemetry.emit(
                         self.ticks, "admit", rid=req.rid, slot=i,
                         rclass=req.rclass, rows=plen,
                         readmit=req.preempt_count)
-                    self._append_pages(i, self.pool.alloc(i, first))
+                    if self.prefix is not None:
+                        if n_hit:
+                            self.pool.share(i, hit_pages)
+                            self._append_pages(i, hit_pages, fresh=False)
+                            self.telemetry.emit(
+                                self.ticks, "prefix_hit", rid=req.rid,
+                                slot=i, pages=n_hit, rows=cursor)
+                            self.telemetry.count("prefix_hit_pages",
+                                                 n_hit)
+                        else:
+                            self.telemetry.emit(
+                                self.ticks, "prefix_miss", rid=req.rid,
+                                slot=i)
+                        self._chain[i] = (hit_digest, n_hit)
+                    if cow_at is not None:
+                        self._cow_page(i, cow_at)
+                    self._append_pages(i, self.pool.alloc(i, suffix_need))
                     break             # chunks run in _prefill_tick
                 prompt = self._effective_prompt(req)
                 bucket = self.bucket_for(len(prompt))
@@ -1169,6 +1351,10 @@ class ServingEngine:
                 if not self._preempt_for(need, protect={i}):
                     continue                   # stalled, retry next tick
                 self._append_pages(i, self.pool.alloc(i, need))
+            # Write barrier: the chunk executable writes its full padded
+            # width [cursor, cursor + chunk) — split any shared page in
+            # reach first (no-op in steady state; see _cow_range).
+            self._cow_range(i, cursor, cursor + self.chunk)
             served += 1
             self._prefill_wait.pop(i, None)    # served: aging resets
             chunk_toks = np.zeros((1, self.chunk), np.int32)
@@ -1188,6 +1374,11 @@ class ServingEngine:
                     jnp.int32(end), jnp.int32(last_in), jnp.int32(i),
                     self.caches, self._emit_key(req))
                 sp.compile = self.prefill_traces.get(self.chunk, 0) > n0
+            # Publish the prefix pages this chunk completed: every row
+            # below ``end`` went through the (deterministic) chunk
+            # executable, so equal token prefixes yield equal page
+            # contents and a future admission can share them.
+            self._publish_rows(i, req, end)
             if end < true_len:
                 self._prefilling[i] = end
                 continue

@@ -32,6 +32,14 @@ Pieces:
 * ``chunk_page_need`` — the chunked-prefill allocation unit: how many
   pages a slot must add before streaming one prompt chunk through its
   table (admission headroom and the prefill scheduler share it).
+* ``PrefixIndex`` — hash-keyed map from full-page-aligned token prefixes
+  to resident page runs. Prefix caching is page-table sharing: the index
+  holds a refcount on each published page, admission maps hit pages into
+  a new slot's table by bumping refcounts (zero data movement — the page
+  table IS the sharing mechanism), and the engine copy-on-writes before
+  any write that would land in a shared page. The classic TLB/page-
+  sharing trick the paper's memory-hierarchy chapters dissect, applied
+  to our software TLB.
 
 The physical pools themselves live in the model caches (one pool per
 pattern position, stacked over periods — see
@@ -42,9 +50,11 @@ page table per slot, so the allocator needs no notion of layers.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import hashlib
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
 NULL_PAGE = 0
 
@@ -83,12 +93,21 @@ class PageAllocator:
     allocatable ``capacity`` is ``n_pages - 1`` on *any* mesh: sharding
     the pool over ``n_devices`` changes where a page physically lives,
     never how many a request costs — admission and preemption stay priced
-    against the global pool. Invariants (asserted):
+    against the global pool.
 
-    * a page is never handed out while still owned by a live slot,
-    * the null page is never handed out,
-    * every page is either free or owned by exactly one slot,
-    * equivalently: no (device, local_page) pair is live twice.
+    Pages are **refcounted**: a live page is held by one or more slots
+    (``share``) and/or the prefix index (``retain``); it returns to the
+    free list only when its count drops to zero. Refcounts are host-side
+    bookkeeping only — the device pools never see them, so the sharded
+    pool (``serve.dist``) composes unchanged and a shared page simply
+    lives on whichever device first allocated it. Invariants (asserted):
+
+    * a free page is never handed out while still live,
+    * the null page is never handed out and never refcounted,
+    * every live page has refcount >= 1; refcount 0 <=> free,
+    * ``pages_allocated - pages_freed == pages_in_use`` (conservation:
+      allocation counts free->live transitions, freeing counts
+      live->free transitions — sharing bumps neither).
     """
 
     n_pages: int
@@ -110,12 +129,23 @@ class PageAllocator:
         self._free_by_dev[0] = list(range(self.block - 1, NULL_PAGE, -1))
         self.slot_pages: Dict[int, List[int]] = {}
         self._live: set = set()
+        # Per-page refcounts (slot holds + prefix-index holds). A page in
+        # _index_held is retained by the prefix index; with refcount 1 it
+        # is "cached idle" — resident but unreferenced by any slot, the
+        # evictable class.
+        self._ref: Dict[int, int] = {}
+        self._index_held: set = set()
         self.high_water = 0
         # Cumulative churn counters (never decremented): post-run pool
         # sizing audits need total traffic, not just the instantaneous
         # occupancy — conservation law: allocated - freed == in use.
         self.pages_allocated = 0
         self.pages_freed = 0
+        # Sharing churn (cumulative): share() page-mappings handed out,
+        # prefix-index retains, and copy-on-write page splits.
+        self.shared_mappings = 0
+        self.index_retains = 0
+        self.cow_count = 0
 
     # -- device geometry ------------------------------------------------------
 
@@ -159,9 +189,16 @@ class PageAllocator:
         single long context spans devices instead of exhausting one
         block — global capacity is the only admission constraint.
         """
+        got = self._take(n, owner=f"slot {slot}")
+        self.slot_pages.setdefault(slot, []).extend(got)
+        return got
+
+    def _take(self, n: int, owner: str = "?") -> List[int]:
+        """Pull ``n`` fresh pages (refcount 1) off the free lists without
+        assigning them to a slot — ``alloc`` and ``cow`` share it."""
         if self.free_pages < n:
             raise PagePoolExhausted(
-                f"need {n} pages for slot {slot}, {self.free_pages} free "
+                f"need {n} pages for {owner}, {self.free_pages} free "
                 f"({self.pages_in_use}/{self.capacity} in use)")
         got = []
         for _ in range(n):
@@ -171,22 +208,83 @@ class PageAllocator:
         for p in got:
             assert p != NULL_PAGE and p not in self._live, p
             self._live.add(p)
-        self.slot_pages.setdefault(slot, []).extend(got)
+            self._ref[p] = 1
         self.pages_allocated += len(got)
         self.high_water = max(self.high_water, self.pages_in_use)
         return got
 
-    def free_slot(self, slot: int) -> List[int]:
-        """Return every page owned by ``slot`` to its device's free list."""
-        pages = self.slot_pages.pop(slot, [])
+    def share(self, slot: int, pages: Sequence[int]) -> None:
+        """Map already-live ``pages`` into ``slot``'s table by bumping
+        refcounts — the prefix-cache hit path. Zero data movement: the
+        pages stay where they are, only the slot's page table (installed
+        by the engine) and the host-side counts change."""
+        pages = [int(p) for p in pages]
         for p in pages:
-            assert p in self._live, p
-            self._live.discard(p)
+            assert p in self._live and self._ref.get(p, 0) >= 1, p
+            self._ref[p] += 1
+        self.slot_pages.setdefault(slot, []).extend(pages)
+        self.shared_mappings += len(pages)
+
+    def retain(self, page: int) -> None:
+        """Prefix-index hold on a live page (at most one per page)."""
+        page = int(page)
+        assert page in self._live and page not in self._index_held, page
+        self._ref[page] += 1
+        self._index_held.add(page)
+        self.index_retains += 1
+
+    def release(self, page: int) -> bool:
+        """Drop the prefix-index hold; frees the page if that was the
+        last reference. Returns True when the page was freed."""
+        page = int(page)
+        assert page in self._index_held, page
+        self._index_held.discard(page)
+        return self._decref(page)
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(int(page), 0)
+
+    def _decref(self, page: int) -> bool:
+        """Drop one reference; on the live->free transition return the
+        page to its device's free list. Returns True when freed."""
+        assert page in self._live and self._ref[page] >= 1, page
+        self._ref[page] -= 1
+        if self._ref[page] > 0:
+            return False
+        del self._ref[page]
+        self._live.discard(page)
+        self._free_by_dev[self.device_of(page)].append(page)
+        self.pages_freed += 1
+        return True
+
+    def cow(self, slot: int, pos: int) -> Tuple[int, int]:
+        """Copy-on-write split: replace the shared page at table position
+        ``pos`` of ``slot`` with a fresh exclusive page. Returns
+        ``(old, new)`` global page ids — the *caller* copies the K/V rows
+        on device and swaps the device-side table entry; the allocator
+        only rewires ownership. Raises ``PagePoolExhausted`` (changing
+        nothing) when no page is free."""
+        old = self.slot_pages[slot][pos]
+        assert self._ref.get(old, 0) >= 2, \
+            f"COW of unshared page {old} (ref {self._ref.get(old, 0)})"
+        new = self._take(1, owner=f"cow slot {slot}")[0]
+        self.slot_pages[slot][pos] = new
+        self._decref(old)            # ref >= 2, so never frees
+        self.cow_count += 1
+        return old, new
+
+    def free_slot(self, slot: int) -> List[int]:
+        """Drop ``slot``'s reference on every page it maps; pages whose
+        count hits zero return to their device's free list. Returns the
+        pages actually freed (shared pages survive their co-holders)."""
+        pages = self.slot_pages.pop(slot, [])
+        freed = []
         # Reversed: re-admission walks pages in allocation order again.
         for p in reversed(pages):
-            self._free_by_dev[self.device_of(p)].append(p)
-        self.pages_freed += len(pages)
-        return pages
+            if self._decref(p):
+                freed.append(p)
+        freed.reverse()
+        return freed
 
     def reset(self) -> None:
         """Free everything (engine restart)."""
@@ -207,6 +305,22 @@ class PageAllocator:
             occ[self.device_of(p)] += 1
         return occ
 
+    def page_classes(self) -> Dict[str, int]:
+        """Live pages split by sharing state: ``exclusive`` (one slot,
+        no index hold), ``shared`` (refcount >= 2), ``cached_idle``
+        (index hold only — the evictable class). Sums to
+        ``pages_in_use``."""
+        exclusive = shared = cached_idle = 0
+        for p, r in self._ref.items():
+            if r >= 2:
+                shared += 1
+            elif p in self._index_held:
+                cached_idle += 1
+            else:
+                exclusive += 1
+        return {"pages_exclusive": exclusive, "pages_shared": shared,
+                "pages_cached_idle": cached_idle}
+
     def occupancy(self, lengths: Optional[Dict[int, int]] = None) -> dict:
         """Pool utilization; with per-slot ``lengths`` also the internal
         fragmentation (allocated-but-unused rows — the page-granularity
@@ -223,7 +337,11 @@ class PageAllocator:
             "pages_freed": self.pages_freed,
             "utilization": self.pages_in_use / max(1, self.capacity),
             "rows_resident": self.rows_resident(),
+            "shared_mappings": self.shared_mappings,
+            "index_retains": self.index_retains,
+            "cow_count": self.cow_count,
         }
+        out.update(self.page_classes())
         if self.n_devices > 1:
             out["pages_in_use_by_device"] = self.device_occupancy()
         if lengths is not None:
@@ -234,6 +352,145 @@ class PageAllocator:
             out["fragmentation_frac"] = ((alloc_rows - used_rows)
                                          / max(1, alloc_rows))
         return out
+
+
+# ----------------------------------------------------------------------------
+# Prefix index: hash-keyed map from token prefixes to resident page runs
+# ----------------------------------------------------------------------------
+
+ROOT_DIGEST = b""
+_DIGEST_BYTES = 16
+
+
+def _page_digest(parent: bytes, chunk: bytes) -> bytes:
+    """Chained digest of one full page of tokens: hashing the parent
+    digest in means a prefix's key depends on *every* token before it,
+    so equal keys can only come from equal whole prefixes (plus the
+    stored-token check below for collision paranoia)."""
+    return hashlib.blake2b(parent + chunk, digest_size=_DIGEST_BYTES).digest()
+
+
+def token_bytes(tokens) -> bytes:
+    """Canonical byte serialization of a token run (int32 little-endian)."""
+    return np.ascontiguousarray(np.asarray(tokens, np.int32)).tobytes()
+
+
+@dataclasses.dataclass
+class _PrefixEntry:
+    page: int          # global page id the prefix's last page lives in
+    parent: bytes      # digest of the prefix one page shorter (or ROOT)
+    tokens: bytes      # this page's tokens — verified on probe (no
+                       # stream may ever depend on a hash non-collision)
+    children: int      # live entries extending this prefix by one page
+    last_used: int     # engine tick of last probe hit / publish (LRU)
+
+
+class PrefixIndex:
+    """Full-page-aligned prefix -> resident page run, with LRU eviction.
+
+    Granularity is a whole page because a page is the unit the kernel's
+    scalar-prefetch table can remap: sharing a partial page would need
+    row-level copy at admission, which is exactly the data movement the
+    page table exists to avoid. Each entry holds one ``retain`` on its
+    page, so a published page survives its writer (cached idle) until
+    ``evict`` releases it; entries whose page is also mapped by a slot
+    (refcount >= 2) are never evicted — the slot's stream depends on it.
+    """
+
+    def __init__(self, pool: PageAllocator):
+        self.pool = pool
+        self.page_size = pool.page_size
+        self._entries: Dict[bytes, _PrefixEntry] = {}
+        # Cumulative eviction traffic (pages released back to the pool).
+        self.evicted_pages = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def probe(self, tokens, max_pages: int,
+              now: int = 0) -> Tuple[List[int], bytes, int]:
+        """Longest cached prefix of ``tokens``, capped at ``max_pages``
+        full pages. Returns ``(pages, digest, n_hit)`` where ``digest``
+        keys the deepest matched entry (parent for later publishes).
+        Every level's stored tokens are compared byte-for-byte — a hash
+        collision degrades to a miss, never to a wrong-stream share."""
+        ps = self.page_size
+        n_full = min(len(tokens) // ps, int(max_pages))
+        pages: List[int] = []
+        parent = ROOT_DIGEST
+        for i in range(n_full):
+            chunk = token_bytes(tokens[i * ps:(i + 1) * ps])
+            digest = _page_digest(parent, chunk)
+            e = self._entries.get(digest)
+            if e is None or e.tokens != chunk:
+                break
+            e.last_used = now
+            pages.append(e.page)
+            parent = digest
+        return pages, parent, len(pages)
+
+    def publish(self, tokens, page: int, parent: bytes,
+                now: int = 0) -> Optional[bytes]:
+        """Register one full page of tokens extending ``parent``.
+
+        An existing entry wins — the pool holds one copy per distinct
+        prefix, so the caller's duplicate page stays its own exclusive
+        copy and future admissions share the incumbent. A token mismatch
+        at an existing digest (hash collision) refuses to publish and
+        returns None, stopping the caller's chain. Otherwise returns the
+        digest to parent the next page on."""
+        chunk = token_bytes(tokens)
+        assert len(chunk) == 4 * self.page_size, "publish needs a full page"
+        digest = _page_digest(parent, chunk)
+        e = self._entries.get(digest)
+        if e is not None:
+            if e.tokens != chunk:
+                return None
+            e.last_used = now
+            return digest
+        self.pool.retain(page)
+        if parent != ROOT_DIGEST and parent in self._entries:
+            self._entries[parent].children += 1
+        self._entries[digest] = _PrefixEntry(
+            page=int(page), parent=parent, tokens=chunk,
+            children=0, last_used=now)
+        return digest
+
+    def evict(self, n_pages: int, now: int = 0) -> int:
+        """Release up to ``n_pages`` cached-idle pages, LRU leaf first.
+
+        Only leaves (``children == 0``) whose page has refcount 1 (the
+        index's own hold) are candidates: interior entries back longer
+        cached prefixes and slot-mapped pages back live streams. Freeing
+        a leaf can turn its parent into a candidate, so long-dead chains
+        unwind back-to-front across iterations. Returns pages freed."""
+        freed = 0
+        while freed < n_pages:
+            best = None
+            for digest, e in self._entries.items():
+                if e.children != 0 or self.pool.refcount(e.page) != 1:
+                    continue
+                if best is None or e.last_used < best[1].last_used:
+                    best = (digest, e)
+            if best is None:
+                break
+            digest, e = best
+            del self._entries[digest]
+            if e.parent != ROOT_DIGEST and e.parent in self._entries:
+                self._entries[e.parent].children -= 1
+            self.pool.release(e.page)
+            freed += 1
+        self.evicted_pages += freed
+        return freed
+
+    def clear(self) -> int:
+        """Drop every entry (engine reset); returns pages freed."""
+        freed = 0
+        for e in self._entries.values():
+            if self.pool.release(e.page):
+                freed += 1
+        self._entries.clear()
+        return freed
 
 
 # ----------------------------------------------------------------------------

@@ -8,6 +8,7 @@ our own serving stack. Three surfaces, one bookkeeping home:
     tick events (``admit``, ``shed``, ``preempt``, ``degrade_enter`` /
     ``degrade_exit``, ``spec_verify`` with accept counts,
     ``prefill_chunk``, ``page_alloc`` / ``page_free``, ``probe_tick``,
+    ``prefix_hit`` / ``prefix_miss`` / ``cow_copy`` / ``prefix_evict``,
     terminal outcomes) emitted from the engine's existing decision
     points. The legacy ad-hoc counters (``admission_rejections``,
     ``shed_by_class``, ``preemption_log``, spec stats) are *views over
@@ -65,6 +66,10 @@ EVENT_KINDS = frozenset({
     "page_alloc",     # pages granted to a slot
     "page_free",      # a freed slot's pages returned to the pool
     "probe_tick",     # k=1 trial tick while speculation is disabled
+    "prefix_hit",     # admission mapped cached prefix pages (refcounts)
+    "prefix_miss",    # admission probed the prefix index and found none
+    "cow_copy",       # copy-on-write split of a shared page
+    "prefix_evict",   # LRU reclaim of cached-idle prefix pages
 })
 
 

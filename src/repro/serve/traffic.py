@@ -73,6 +73,19 @@ class TrafficClass:
     # latencies on the machine actually serving.
     ttft_ms: Optional[float] = None
     tpot_ms: Optional[float] = None
+    # Session mode (ROADMAP carry-over: multi-turn arrivals that share
+    # prefixes). With ``sessions > 0`` the class keeps a pool of that
+    # many distinct session prefixes, each ``prefix_len`` tokens; every
+    # arrival picks a session (seeded uniform) and prepends its prefix
+    # to a fresh log-uniform suffix — returning users re-offer the same
+    # opening tokens, the workload shape prefix caching monetizes
+    # (``ServeConfig.prefix_cache``; the ``prefix_cache_hit`` bench cell
+    # drives exactly this traffic). The prefix pool draws from a
+    # *separate* seeded RNG stream, so session-mode arrival times,
+    # classes, and suffixes are bit-identical to the same config with
+    # sessions off — only the prompt heads change.
+    sessions: int = 0
+    prefix_len: int = 0
 
     def __post_init__(self):
         assert self.weight > 0, self.weight
@@ -80,6 +93,9 @@ class TrafficClass:
         assert 1 <= self.out_lo <= self.out_hi
         assert self.ttft_ms is None or self.ttft_ms > 0
         assert self.tpot_ms is None or self.tpot_ms > 0
+        assert self.sessions >= 0 and self.prefix_len >= 0
+        assert (self.sessions > 0) == (self.prefix_len > 0), \
+            "session mode needs both sessions and prefix_len"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,6 +146,18 @@ class TrafficGenerator:
     def __init__(self, cfg: TrafficConfig):
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
+        # Session prefixes come from a *separate* seeded stream: the
+        # main stream draws exactly the same sequence with sessions on
+        # or off, so flipping session mode changes prompt heads only —
+        # arrival times, class picks, and suffixes stay bit-identical
+        # (the prefix_cache_hit cell compares engines across that flip).
+        self._session_rng = np.random.default_rng([cfg.seed, 0x5E55])
+        self._session_prefixes: Dict[str, np.ndarray] = {}
+        for c in cfg.classes:
+            if c.sessions:
+                self._session_prefixes[c.name] = self._session_rng.integers(
+                    2, cfg.vocab, size=(c.sessions, c.prefix_len),
+                    dtype=np.int64).astype(np.int32)
 
     def _log_uniform(self, lo: int, hi: int) -> int:
         if lo == hi:
@@ -163,6 +191,15 @@ class TrafficGenerator:
                 plen = min(plen, cfg.max_prompt)
             prompt = self.rng.integers(2, cfg.vocab, size=(plen,),
                                        dtype=np.int64).astype(np.int32)
+            if cls.sessions:
+                # A returning user: this session's shared opening tokens
+                # ahead of the per-arrival suffix (clamped prefix-first —
+                # the shared head is what the prefix cache can reuse).
+                pool = self._session_prefixes[cls.name]
+                sid = int(self._session_rng.integers(0, cls.sessions))
+                prompt = np.concatenate([pool[sid], prompt])
+                if cfg.max_prompt is not None:
+                    prompt = prompt[:cfg.max_prompt]
             out.append(Arrival(
                 tick=int(t), rid=rid0 + n, rclass=cls.name, prompt=prompt,
                 max_new=self._log_uniform(cls.out_lo, cls.out_hi)))

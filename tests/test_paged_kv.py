@@ -85,6 +85,65 @@ def test_allocator_never_double_assigns_live_pages(seed):
         assert len(owned) + al.free_pages == al.n_pages - 1
 
 
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_refcount_churn_never_double_frees_or_leaks(seed):
+    """Property: random share/retain/COW/release churn layered on
+    alloc/free keeps every reference accounted for — a live page's
+    refcount equals its slot-table occurrences plus its index hold, live
+    and free pages partition the pool, and the conservation counters
+    (allocated - freed == in-use) balance after every operation."""
+    rng = np.random.RandomState(seed)
+    al = paged.PageAllocator(n_pages=int(rng.randint(6, 24)),
+                             page_size=int(rng.randint(1, 5)))
+    held = set()                              # mirror of the index hold
+    for _ in range(80):
+        op = rng.rand()
+        slots = sorted(s for s, ps in al.slot_pages.items() if ps)
+        if op < 0.35:
+            try:
+                al.alloc(int(rng.randint(0, 6)), int(rng.randint(1, 4)))
+            except paged.PagePoolExhausted:
+                pass
+        elif op < 0.50 and slots:             # prefix-hit path
+            src = slots[rng.randint(len(slots))]
+            k = int(rng.randint(1, len(al.slot_pages[src]) + 1))
+            al.share(int(rng.randint(0, 6)), al.slot_pages[src][:k])
+        elif op < 0.60 and slots:             # publish path
+            run = al.slot_pages[slots[rng.randint(len(slots))]]
+            p = run[rng.randint(len(run))]
+            if p not in held:
+                al.retain(p)
+                held.add(p)
+        elif op < 0.70 and held:              # evict path
+            p = sorted(held)[rng.randint(len(held))]
+            held.discard(p)
+            al.release(p)
+        elif op < 0.85 and slots:             # COW a shared page
+            src = slots[rng.randint(len(slots))]
+            pos = int(rng.randint(len(al.slot_pages[src])))
+            if al.refcount(al.slot_pages[src][pos]) >= 2:
+                try:
+                    al.cow(src, pos)
+                except paged.PagePoolExhausted:
+                    pass
+        else:
+            al.free_slot(int(rng.randint(0, 6)))
+        counts = {}
+        for ps in al.slot_pages.values():
+            for p in ps:
+                counts[p] = counts.get(p, 0) + 1
+        for p in held:
+            counts[p] = counts.get(p, 0) + 1
+        assert paged.NULL_PAGE not in counts
+        assert counts == {p: al.refcount(p) for p in counts}, "ref drift"
+        assert len(counts) == al.pages_in_use
+        assert al.pages_in_use + al.free_pages == al.n_pages - 1
+        assert al.pages_allocated - al.pages_freed == al.pages_in_use
+        cls = al.page_classes()
+        assert sum(cls.values()) == al.pages_in_use
+
+
 def test_pages_for():
     assert [paged.pages_for(n, 8) for n in (0, 1, 8, 9, 16)] == \
         [0, 1, 1, 2, 2]

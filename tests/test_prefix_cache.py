@@ -1,0 +1,306 @@
+"""Prefix caching: admissions that share a cached prefix map existing
+pages by refcount (zero data movement) and must emit streams bit-identical
+to the uncached engine — across greedy, sampled, speculative and
+preemption paths. Copy-on-write isolates the one admission case whose
+write cursor lands inside a shared page; cached-idle pages are reclaimed
+(LRU) before any live slot is preempted; and the hit/COW telemetry
+reconciles exactly with the allocator's refcount totals (check.sh gates
+this file in the serving subset)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.models import transformer as T
+from repro.serve.engine import (Request, ServeConfig, ServingEngine,
+                                greedy_generate)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get_smoke("qwen3-4b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _pcfg(**kw):
+    base = dict(max_len=64, batch=2, eos_id=-1, paged=True, page_size=8,
+                chunk_size=8, prefix_cache=True)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def _ref(params, cfg, prompt, n, max_len=64):
+    return np.asarray(greedy_generate(params, cfg,
+                                      jnp.asarray(prompt)[None], n,
+                                      max_len=max_len)[0]).tolist()
+
+
+def _shared_prompts(cfg, rng, n=3, prefix_len=16):
+    """n prompts sharing a page-aligned prefix, distinct short suffixes."""
+    shared = rng.randint(2, cfg.vocab, prefix_len).astype(np.int32)
+    return {rid: np.concatenate(
+        [shared, rng.randint(2, cfg.vocab, 3 + rid)]).astype(np.int32)
+        for rid in range(n)}
+
+
+# ----------------------------------------------------------------------------
+# Bit-parity: cached streams are the uncached engine's streams
+# ----------------------------------------------------------------------------
+
+def test_cached_admissions_stream_reference_tokens(model):
+    """Sequential sharers: the first admission publishes the prefix pages,
+    later ones map them (2 full pages each) — and every stream is exactly
+    the contiguous greedy reference."""
+    cfg, params = model
+    rng = np.random.RandomState(0)
+    prompts = _shared_prompts(cfg, rng)
+    eng = ServingEngine(params, cfg, _pcfg(batch=1))
+    got = {}
+    for rid, p in prompts.items():
+        eng.submit(Request(rid=rid, prompt=p, max_new=6))
+        got.update(eng.run_until_drained())
+    assert eng.prefix_hits == 2 and eng.prefix_misses == 1
+    assert eng.prefix_hit_pages == 4          # 16-token prefix = 2 pages
+    for rid, p in prompts.items():
+        assert got[rid] == _ref(params, cfg, p, 6), rid
+    # After drain only the cached-idle copies stay resident: one page run
+    # per distinct prefix, nothing shared or slot-exclusive leaks.
+    cls = eng.pool.page_classes()
+    assert cls["pages_shared"] == 0 and cls["pages_exclusive"] == 0
+    assert cls["pages_cached_idle"] == eng.pool.pages_in_use > 0
+    eng.prefix.clear()
+    assert eng.pool.pages_in_use == 0         # nothing leaked past the index
+
+
+@pytest.mark.parametrize("kw", [
+    dict(),                                   # greedy
+    dict(temperature=0.8, seed=7),            # sampled
+    dict(spec_k=2, draft="ngram"),            # speculative
+])
+def test_cached_vs_uncached_bit_parity(model, kw):
+    """The same request sequence through prefix-cache on/off engines
+    emits byte-identical token streams on every decode path."""
+    cfg, params = model
+    rng = np.random.RandomState(1)
+    prompts = _shared_prompts(cfg, rng)
+    streams = {}
+    for on in (False, True):
+        eng = ServingEngine(params, cfg,
+                            _pcfg(batch=1, prefix_cache=on, **kw))
+        got = {}
+        for rid, p in prompts.items():
+            eng.submit(Request(rid=rid, prompt=p.copy(), max_new=8))
+            got.update(eng.run_until_drained())
+        streams[on] = got
+        if on:
+            assert eng.prefix_hits >= 2, kw
+    assert streams[True] == streams[False], kw
+
+
+def test_preemption_with_shared_pages_keeps_streams_exact(model):
+    """Pool exhaustion with live shared/retained pages still preempts the
+    youngest slot cleanly: refcounted frees, re-admission (now possibly a
+    cache hit on its own earlier prefix), reference streams throughout."""
+    cfg, params = model
+    rng = np.random.RandomState(2)
+    shared = rng.randint(2, cfg.vocab, 8).astype(np.int32)
+    pa = np.concatenate([shared,
+                         rng.randint(2, cfg.vocab, 7)]).astype(np.int32)
+    pb = np.concatenate([shared,
+                         rng.randint(2, cfg.vocab, 6)]).astype(np.int32)
+    eng = ServingEngine(params, cfg, _pcfg(n_pages=6))
+    eng.submit(Request(rid=0, prompt=pa, max_new=9))
+    eng.submit(Request(rid=1, prompt=pb, max_new=9))
+    got = eng.run_until_drained()
+    assert eng.preemptions >= 1
+    for rid, pr in ((0, pa), (1, pb)):
+        assert got[rid] == _ref(params, cfg, pr, 9), rid
+
+
+@given(seed=st.integers(0, 200))
+@settings(max_examples=8, deadline=None)
+def test_random_shared_traffic_parity(seed):
+    """Property: random shared-prefix mixes (varying prefix alignment,
+    suffix lengths, arrival interleaving) — cached and uncached engines
+    agree stream-for-stream."""
+    cfg = configs.get_smoke("qwen3-4b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(seed)
+    shared = rng.randint(2, cfg.vocab, rng.randint(4, 20)).astype(np.int32)
+    prompts = {}
+    for rid in range(4):
+        sfx = rng.randint(2, cfg.vocab, rng.randint(1, 9))
+        prompts[rid] = np.concatenate([shared, sfx]).astype(np.int32)
+    streams = {}
+    for on in (False, True):
+        eng = ServingEngine(params, cfg, _pcfg(prefix_cache=on))
+        got = {}
+        for rid, p in prompts.items():
+            eng.submit(Request(rid=rid, prompt=p.copy(), max_new=5))
+            if rid % 2:                       # interleave waves
+                got.update(eng.run_until_drained())
+        got.update(eng.run_until_drained())
+        streams[on] = got
+    assert streams[True] == streams[False]
+
+
+# ----------------------------------------------------------------------------
+# Copy-on-write
+# ----------------------------------------------------------------------------
+
+def test_full_coverage_hit_cows_the_cursor_page(model):
+    """A page-aligned prompt fully covered by the index re-admits with
+    its prefill cursor clamped *inside* the last shared page — that page
+    must split (copy-on-write) at admission, because the batched decode
+    step would otherwise scribble garbage rows into a page other holders
+    read. One COW, identical streams, one cached copy per prefix."""
+    cfg, params = model
+    rng = np.random.RandomState(3)
+    prompt = rng.randint(2, cfg.vocab, 16).astype(np.int32)  # 2 full pages
+    eng = ServingEngine(params, cfg, _pcfg(batch=1))
+    eng.submit(Request(rid=0, prompt=prompt, max_new=6))
+    a = eng.run_until_drained()
+    eng.submit(Request(rid=1, prompt=prompt.copy(), max_new=6))
+    b = eng.run_until_drained()
+    assert eng.prefix_hits == 1 and eng.prefix_hit_pages == 2
+    assert eng.cow_copies >= 1
+    assert eng.cow_copies == eng.pool.cow_count
+    ref = _ref(params, cfg, prompt, 6)
+    assert a[0] == ref and b[1] == ref
+    # One copy per distinct prefix: exactly the 2 published pages remain.
+    assert len(eng.prefix) == 2
+    assert eng.pool.page_classes()["pages_cached_idle"] == 2
+
+
+# ----------------------------------------------------------------------------
+# Eviction sits below preemption on the degradation ladder
+# ----------------------------------------------------------------------------
+
+def test_cached_idle_pages_evict_before_preemption(model):
+    """Pool pressure from fresh admissions reclaims unreferenced cached
+    prefixes (LRU) — no live slot is preempted while idle cache pages
+    could be freed instead, and the new streams are exact."""
+    cfg, params = model
+    rng = np.random.RandomState(4)
+    warm = rng.randint(2, cfg.vocab, 24).astype(np.int32)    # 3 full pages
+    eng = ServingEngine(params, cfg, _pcfg(n_pages=9))       # 8 usable
+    eng.submit(Request(rid=0, prompt=warm, max_new=4))
+    eng.run_until_drained()
+    assert eng.pool.page_classes()["pages_cached_idle"] == 3
+    pa = rng.randint(2, cfg.vocab, 15).astype(np.int32)
+    pb = rng.randint(2, cfg.vocab, 15).astype(np.int32)
+    eng.submit(Request(rid=1, prompt=pa, max_new=9))
+    eng.submit(Request(rid=2, prompt=pb, max_new=9))
+    got = eng.run_until_drained()
+    assert eng.prefix_evictions >= 1
+    assert eng.preemptions == 0
+    for rid, pr in ((1, pa), (2, pb)):
+        assert got[rid] == _ref(params, cfg, pr, 9), rid
+
+
+def test_slot_mapped_cached_pages_are_never_evicted(model):
+    """Eviction only touches refcount-1 (index-only) pages: while a
+    sharer is mid-stream its mapped prefix pages survive any pressure,
+    so its stream can never be corrupted by reclaim."""
+    cfg, params = model
+    rng = np.random.RandomState(5)
+    shared = rng.randint(2, cfg.vocab, 16).astype(np.int32)
+    pa = np.concatenate([shared,
+                         rng.randint(2, cfg.vocab, 3)]).astype(np.int32)
+    eng = ServingEngine(params, cfg, _pcfg(batch=1))
+    eng.submit(Request(rid=0, prompt=pa, max_new=4))
+    eng.run_until_drained()
+    eng.submit(Request(rid=1, prompt=pa.copy(), max_new=12))
+    while eng.slots[0] is None:
+        eng.tick()                            # admitted: prefix mapped
+    assert eng.pool.page_classes()["pages_shared"] >= 1
+    evicted_before = eng.prefix.evicted_pages
+    eng.prefix.evict(64, now=eng.ticks)       # reclaim everything idle
+    assert eng.pool.page_classes()["pages_shared"] >= 1   # survived
+    got = eng.run_until_drained()
+    assert got[1] == _ref(params, cfg, pa, 12)
+    assert eng.prefix.evicted_pages >= evicted_before
+
+
+# ----------------------------------------------------------------------------
+# Admission pricing + telemetry reconciliation
+# ----------------------------------------------------------------------------
+
+def test_cached_admission_prices_only_the_suffix(model):
+    """The admission bugfix: a re-admission of a cached long prompt
+    reserves suffix pages only — fewer fresh allocations and an earlier
+    first token than the cold engine on the identical request."""
+    cfg, params = model
+    rng = np.random.RandomState(6)
+    long = rng.randint(2, cfg.vocab, 32).astype(np.int32)    # 4 chunks
+    eng = ServingEngine(params, cfg, _pcfg(batch=1))
+    eng.submit(Request(rid=0, prompt=long, max_new=4))
+    eng.run_until_drained()
+    cold_ttft = eng.first_token_tick[0]
+    alloc0 = eng.pool.pages_allocated
+    t0 = eng.ticks
+    eng.submit(Request(rid=1, prompt=long.copy(), max_new=4))
+    got = eng.run_until_drained()
+    warm_ttft = eng.first_token_tick[1] - t0
+    assert warm_ttft < cold_ttft              # suffix-only prefill
+    # 4 prompt pages were mapped, not refilled: fresh takes are the COW
+    # split plus decode growth only.
+    assert eng.pool.pages_allocated - alloc0 < 4
+    assert got[1] == _ref(params, cfg, long, 4)
+
+
+def test_hit_and_cow_telemetry_reconciles_with_allocator(model):
+    """Telemetry is derived truth: hit/COW/evict event sums equal the
+    allocator's own refcount-transition counters, and the PR-8
+    conservation law extends exactly — allocator allocations are the
+    page_alloc events plus COW takes; frees are the page_free events
+    plus index evictions."""
+    cfg, params = model
+    rng = np.random.RandomState(7)
+    shared = rng.randint(2, cfg.vocab, 16).astype(np.int32)
+    eng = ServingEngine(params, cfg, _pcfg(n_pages=12))
+    rid = 0
+    for wave in range(3):
+        for _ in range(2):
+            sfx = rng.randint(2, cfg.vocab, rng.randint(1, 9))
+            eng.submit(Request(
+                rid=rid, max_new=5,
+                prompt=np.concatenate([shared, sfx]).astype(np.int32)))
+            rid += 1
+        eng.run_until_drained()
+    eng.submit(Request(rid=rid, prompt=shared.copy(), max_new=5))
+    eng.run_until_drained()                   # full-coverage: fires COW
+    pool, tel = eng.pool, eng.telemetry
+    assert eng.prefix_hits >= 3 and eng.cow_copies >= 1
+    assert eng.prefix_hit_pages == pool.shared_mappings
+    assert eng.prefix_hit_pages == sum(
+        p["pages"] for _, _, _, p in tel.events_of("prefix_hit"))
+    assert eng.cow_copies == pool.cow_count
+    assert eng.prefix.evicted_pages == sum(
+        p["n"] for _, _, _, p in tel.events_of("prefix_evict"))
+    alloc_ev = sum(p["n"] for _, _, _, p in tel.events_of("page_alloc"))
+    free_ev = sum(p["n"] for _, _, _, p in tel.events_of("page_free"))
+    assert alloc_ev + pool.cow_count == pool.pages_allocated
+    assert free_ev + eng.prefix.evicted_pages == pool.pages_freed
+    assert pool.pages_allocated - pool.pages_freed == pool.pages_in_use
+
+
+def test_prefix_cache_off_engine_is_untouched(model):
+    """Default-off: no index, no hit/miss/COW events, and the drain-time
+    pages_in_use == 0 invariant every pre-existing test relies on."""
+    cfg, params = model
+    rng = np.random.RandomState(8)
+    prompts = _shared_prompts(cfg, rng)
+    eng = ServingEngine(params, cfg, _pcfg(prefix_cache=False))
+    for rid, p in prompts.items():
+        eng.submit(Request(rid=rid, prompt=p, max_new=5))
+    got = eng.run_until_drained()
+    assert eng.prefix is None
+    assert eng.prefix_hits == eng.prefix_misses == eng.cow_copies == 0
+    assert eng.pool.pages_in_use == 0
+    for rid, p in prompts.items():
+        assert got[rid] == _ref(params, cfg, p, 5), rid

@@ -56,6 +56,39 @@ def test_generator_is_deterministic_per_seed():
                for x, z in zip(a, c))
 
 
+def test_session_mode_shares_prefixes_without_perturbing_arrivals():
+    """Session classes (returning users) draw shared per-session prefixes
+    from a dedicated RNG stream: every arrival's head is one of the
+    class's pooled prefixes, and the underlying arrival process (ticks,
+    suffix tokens, output lengths) is bit-identical with sessions on or
+    off — sessions only prepend, they never re-seed the main stream."""
+    base = dict(prompt_lo=4, prompt_hi=12, out_lo=2, out_hi=4)
+    off = traffic.TrafficGenerator(_tcfg(classes=(
+        traffic.TrafficClass("chat", **base),))).arrivals()
+    gen = traffic.TrafficGenerator(_tcfg(classes=(
+        traffic.TrafficClass("chat", sessions=3, prefix_len=16,
+                             **base),)))
+    on = gen.arrivals()
+    pool = gen._session_prefixes["chat"]
+    assert pool.shape == (3, 16)
+    seen = set()
+    for a, b in zip(off, on):
+        assert (a.tick, a.rid, a.max_new) == (b.tick, b.rid, b.max_new)
+        head, tail = b.prompt[:16], b.prompt[16:]
+        sids = [s for s in range(3) if (pool[s] == head).all()]
+        assert sids, "arrival head is not a pooled session prefix"
+        seen.update(sids)
+        np.testing.assert_array_equal(tail, a.prompt)   # same main draw
+    assert len(seen) >= 2                    # multiple sessions exercised
+
+
+def test_session_mode_requires_both_knobs():
+    with pytest.raises(AssertionError):
+        traffic.TrafficClass("bad", sessions=2)
+    with pytest.raises(AssertionError):
+        traffic.TrafficClass("bad", prefix_len=8)
+
+
 def test_poisson_arrivals_match_offered_rate():
     arr = traffic.TrafficGenerator(
         _tcfg(rate=4.0, n_requests=2000)).arrivals()
