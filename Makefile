@@ -1,4 +1,4 @@
-.PHONY: check check-all test bench-fast
+.PHONY: check check-all test bench-fast calibrate
 
 # Fast tier-1 gate: import-walk smoke + fast tests.
 check:
@@ -11,6 +11,14 @@ check:
 bench-fast:
 	PYTHONPATH=src python -m benchmarks.tpu_serving --out BENCH_serving.json
 	PYTHONPATH=src python -m benchmarks.breaking_point --out BENCH_serving.json
+
+# Microbenchmark calibration pass (core/calibrate.py): probe the
+# serving-path cost constants on this backend and persist them under the
+# tuning cache's calibrated: namespace; subsequent engines price their
+# choose_* decisions from the measured set (REPRO_DEFAULT_CONSTANTS=1
+# forces the hand-set defaults back).
+calibrate:
+	PYTHONPATH=src python -m repro.launch.calibrate
 
 # Everything, including slow multi-device subprocess / compile tests.
 check-all:

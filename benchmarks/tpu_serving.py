@@ -523,6 +523,38 @@ def _modeled_tp() -> dict:
     return out
 
 
+def _measured_calibration() -> dict:
+    """calibration_probes cell: run the microbenchmark calibration pass
+    (core/calibrate.py — fast mode, the probes' CI shape), persist the
+    measured constants under the tuning cache's ``calibrated:``
+    namespace, and report measured-vs-assumed per constant. After this
+    cell, ``resolve_constants`` prefers the measured set — the bench
+    asserts that loop actually closed."""
+    from repro.core import calibrate
+
+    results = calibrate.run_calibration(fast=True, persist=True)
+    report = autotune.calibration_report()
+    resolved = autotune.resolve_constants()
+    rows = {}
+    for name, r in results.items():
+        rows[name] = {
+            "measured": r.value,
+            "assumed": report["constants"][name]["assumed"],
+            "drift_ratio": report["constants"][name]["drift_ratio"],
+            "n_trials": r.n_trials,
+            "spread": r.spread,
+            "unit": r.unit,
+        }
+    return {
+        "schema_version": autotune.CALIBRATION_SCHEMA_VERSION,
+        "backend": report["backend"],
+        "mesh": report["mesh"],
+        "n_measured": len(rows),
+        "resolved_source": resolved.source,
+        "constants": rows,
+    }
+
+
 def run():
     m = _measured()
     c = _modeled()
@@ -535,7 +567,12 @@ def run():
     pfk = _modeled_prefix()
     tpm = _measured_tp()
     tpk = _modeled_tp()
+    cal = _measured_calibration()
     return [
+        ("calibration_probes",
+         f"measured={cal['n_measured']};source={cal['resolved_source']};"
+         f"page_lookup_drift="
+         f"{cal['constants']['page_lookup_s']['drift_ratio']:.2g}"),
         ("measured",
          f"{m['tokens_per_s']:.1f}tok/s;prefill={m['prefill_tokens']};"
          f"decode={m['decode_tokens']};"
@@ -601,7 +638,8 @@ def main():
                "prefix_cache_hit": _measured_prefix(),
                "prefix_cache_32k": _modeled_prefix(),
                "tp_pool_capacity": _measured_tp(),
-               "tp_decode_32k": _modeled_tp()}
+               "tp_decode_32k": _modeled_tp(),
+               "calibration_probes": _measured_calibration()}
     print(json.dumps(payload, indent=1))
     assert payload["modeled_decode_32k"]["speedup"] > 1.0
     # Acceptance: paged holds < 50% of the contiguous reservation at
@@ -654,6 +692,15 @@ def main():
     assert tp["decode_executables_1dev"] == 1
     assert payload["tp_decode_32k"]["speedup"] > 1.0
     assert payload["tp_decode_32k"]["pool_capacity_ratio"] == TP_DEVICES
+    # Acceptance: the calibration pass measured >= 5 constants (finite
+    # positive, with a recorded drift ratio against the hand-set
+    # assumption) and resolve_constants now prefers the measured set.
+    cal = payload["calibration_probes"]
+    assert cal["n_measured"] >= 5, cal
+    assert cal["resolved_source"] == "calibrated", cal
+    for name, row in cal["constants"].items():
+        assert row["measured"] > 0 and row["assumed"] > 0, (name, row)
+        assert row["drift_ratio"] > 0, (name, row)
     if args.out:
         # Read-modify-write: breaking_point.py merges its cells into the
         # same BENCH json, so a rerun here must not clobber them.

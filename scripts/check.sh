@@ -22,6 +22,12 @@ echo "== benchmark artifacts =="
 # milliseconds instead of poisoning later runs.
 python scripts/validate_artifacts.py
 
+echo "== calibration smoke =="
+# The microbenchmark calibration pass (core/calibrate.py) must measure
+# every serving-path constant on the CPU backend — fast probes, nothing
+# persisted (the committed cache stays exactly as validated above).
+python -m repro.launch.calibrate --fast --no-persist
+
 # With explicit pytest args, run exactly what the caller asked for: no
 # serving-subset pre-pass (it would be redundant) and no --ignore flags
 # (an explicit serving path + --ignore would collect nothing and exit 5
@@ -55,8 +61,11 @@ if [[ $# -eq 0 ]]; then
     # bit-identical to the untraced engine on every path (greedy,
     # sampled, spec, faults), and the event trace reconciles exactly
     # against the legacy counters and the pool's conservation law.
+    # test_calibrate gates the constant-resolution layer: probes finite/
+    # positive, calibrated entries preferred, torn entries fall back,
+    # REPRO_DEFAULT_CONSTANTS reproduces the default decisions.
     python -m pytest -x -q tests/test_serve_faults.py tests/test_traffic.py \
-        tests/test_telemetry.py
+        tests/test_telemetry.py tests/test_calibrate.py
     IGNORES=(--ignore=tests/test_serve.py --ignore=tests/test_serve_paged.py
              --ignore=tests/test_serve_chunked.py
              --ignore=tests/test_serve_spec.py
@@ -66,7 +75,8 @@ if [[ $# -eq 0 ]]; then
              --ignore=tests/test_serve_dist.py
              --ignore=tests/test_serve_faults.py
              --ignore=tests/test_traffic.py
-             --ignore=tests/test_telemetry.py)
+             --ignore=tests/test_telemetry.py
+             --ignore=tests/test_calibrate.py)
 fi
 
 echo "== test suite =="

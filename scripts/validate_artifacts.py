@@ -63,6 +63,20 @@ def check_tuning_cache(path: str) -> None:
                     and entry["time_s"] > 0):
                 fail(path, f"implausible measurement {key!r}")
             continue
+        if key.startswith("calibrated:"):
+            # Probed serving-path constants (core/calibrate.py):
+            # schema-versioned, finite positive value, probe metadata.
+            if not (isinstance(entry, dict)
+                    and entry.get("schema_version") == 1
+                    and isinstance(entry.get("value"), numbers.Real)
+                    and math.isfinite(entry["value"])
+                    and entry["value"] > 0
+                    and isinstance(entry.get("n_trials"), int)
+                    and entry["n_trials"] > 0
+                    and isinstance(entry.get("backend"), str)
+                    and isinstance(entry.get("mesh"), str)):
+                fail(path, f"malformed calibration entry {key!r}")
+            continue
         if not isinstance(entry, dict) or not {
                 "block_q", "block_k", "time_s", "terms"} <= set(entry):
             fail(path, f"malformed entry {key!r}")
@@ -163,8 +177,13 @@ def check_bench_serving(path: str) -> None:
                    "model_vs_measured.prefill_chunk.ratio",
                    "model_vs_measured.spec_verify.measured_s",
                    "model_vs_measured.spec_verify.modeled_s",
-                   "model_vs_measured.spec_verify.ratio"):
+                   "model_vs_measured.spec_verify.ratio",
+                   "calibration_probes.schema_version",
+                   "calibration_probes.n_measured"):
         require(path, obj, dotted)
+    require(path, obj, "calibration_probes.backend", str)
+    require(path, obj, "calibration_probes.resolved_source", str)
+    require(path, obj, "calibration_probes.constants", dict)
     require(path, obj, "prefix_cache_hit.stream_parity", bool)
     require(path, obj, "prefix_cache_hit.counters_reconcile", bool)
     require(path, obj, "prefix_cache_32k.enabled", bool)
@@ -299,6 +318,29 @@ def check_bench_serving(path: str) -> None:
                 if not (math.isfinite(row[k]) and row[k] > 0):
                     fail(path, f"model_vs_measured.{comp}.{k} "
                                f"not finite/positive")
+        # Calibration acceptance: >= 5 constants actually measured
+        # (finite positive values with a recorded measured-vs-default
+        # drift ratio), and the pass left resolve_constants preferring
+        # the calibrated set. Magnitudes are host-dependent; presence
+        # and sanity are what's gated.
+        cal = obj["calibration_probes"]
+        if cal["schema_version"] != 1:
+            fail(path, "calibration_probes.schema_version != 1")
+        if cal["n_measured"] < 5:
+            fail(path, "calibration pass measured < 5 constants")
+        if cal["resolved_source"] != "calibrated":
+            fail(path, "calibration did not become the resolved set")
+        for name, row in cal["constants"].items():
+            if not isinstance(row, dict):
+                fail(path, f"calibration_probes.constants.{name} "
+                           f"not an object")
+                continue
+            for k in ("measured", "assumed", "drift_ratio"):
+                v = row.get(k)
+                if not (isinstance(v, numbers.Real)
+                        and math.isfinite(v) and v > 0):
+                    fail(path, f"calibration_probes.constants."
+                               f"{name}.{k} not finite/positive")
 
 
 SPECIFIC = {

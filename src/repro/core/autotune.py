@@ -13,6 +13,44 @@ C-stationary accumulation and (bm, bk, bn) tiles, A is streamed N/bn times,
 B M/bm times and C once, so tile choice trades VMEM footprint against HBM
 traffic — exactly the working-set-vs-capacity trade the paper's ch.3
 geometry tables exist to inform.
+
+Serving-path cost constants
+---------------------------
+
+The serving cost models price fixed per-step costs with the constants
+below. Each has a documented hand-set default (the reproducible
+fallback) and — since the calibration pass (``core.calibrate``, run via
+``python -m repro.launch.calibrate``) — a *measured* value probed on the
+actual backend, persisted in the tuning cache under the ``calibrated:``
+namespace and preferred by ``resolve_constants``:
+
+===================  ========  ========================================
+constant             default   measured by (``core.calibrate`` probe)
+===================  ========  ========================================
+``PAGE_LOOKUP_S``    5e-8 s    page-walk slope: ``flash_decode_paged``
+                               vs contiguous ``flash_decode`` across a
+                               page-table-size sweep, regressed per
+                               visited K/V block
+``CHUNK_DISPATCH_S`` 5e-6 s    per-chunk execute span of the chunked
+                               prefill executable (telemetry spans,
+                               compile-separated)
+``PREFIX_HASH_S``    2e-6 s    timed blake2b digest + index probe per
+                               page of tokens (``serve.paged``)
+``NGRAM_DRAFT_S``    2e-6 s    timed ``NgramDraft.propose`` per drafted
+                               token
+``dispatch_s``       (none)    best-of-N tiny-kernel dispatch latency
+                               (no default term — reporting baseline is
+                               ``CHUNK_DISPATCH_S``)
+``hbm_bandwidth``    TPUSpec   timed device copies per dtype at
+                               serving-relevant sizes (stream rate)
+===================  ========  ========================================
+
+Every model/``choose_*`` entry point takes ``constants=`` (a
+``ServeConstants``); None means the hand-set defaults, so existing
+callers and committed bench cells are bit-for-bit unchanged. The
+serving engine resolves once per construction via
+``resolve_constants()``; ``REPRO_DEFAULT_CONSTANTS=1`` forces the
+defaults for reproducibility.
 """
 
 from __future__ import annotations
@@ -422,11 +460,210 @@ def decode_attn_speedup(max_len: int, lengths: Iterable[int], n_heads: int,
             "speedup": naive / fast if fast else float("inf")}
 
 
+# ----------------------------------------------------------------------------
+# Serving-path cost constants: hand-set defaults + measured calibration.
+# ----------------------------------------------------------------------------
+
 # Per-visited-block cost of resolving the page table: one dependent scalar
 # load off the prefetched table before the K/V DMA can issue — the roofline
 # analogue of the paper's TLB-miss penalty (ch. 3: address translation sits
 # on the load's critical path; here it is one SMEM lookup deep).
 PAGE_LOOKUP_S = 5e-8
+
+# Per-chunk dispatch overhead of the chunked-prefill executable: one host
+# enqueue + kernel launch per chunk (the fixed cost small chunks pay more
+# often — the MXU-efficiency side of the chunk-size trade).
+CHUNK_DISPATCH_S = 5e-6
+
+# Host-side cost of one prefix-index level: a blake2b digest over one
+# page of tokens plus a dict probe (``serve.paged.PrefixIndex``).
+PREFIX_HASH_S = 2e-6
+
+# Host-side cost of one n-gram-lookup drafted token (a numpy scan of the
+# slot's history — no model, no HBM).
+NGRAM_DRAFT_S = 2e-6
+
+# Calibrated constants persist in the tuning cache under their own
+# schema-versioned namespace, one entry per (backend, mesh, constant):
+#
+#   calibrated:cpu:dev1:page_lookup_s ->
+#     {"schema_version": 1, "value": 3.1e-8, "n_trials": 5,
+#      "spread": 0.12, "backend": "cpu", "mesh": "dev1",
+#      "timestamp": ..., ...probe metadata}
+#
+# ``resolve_constants`` reads them back per constant: a torn or
+# mis-versioned entry falls back to that constant's hand-set default
+# without failing the others.
+CALIBRATED_PREFIX = "calibrated:"
+CALIBRATION_SCHEMA_VERSION = 1
+
+# Env switch forcing the documented defaults (skip every ``calibrated:``
+# entry) — the reproducibility escape hatch; launch CLIs expose it as
+# ``--default-constants``.
+DEFAULT_CONSTANTS_ENV = "REPRO_DEFAULT_CONSTANTS"
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConstants:
+    """One resolved set of serving-path cost constants.
+
+    ``source`` says where the numbers came from: ``"default"`` (the
+    hand-set module constants — the documented fallback) or
+    ``"calibrated"`` (``core.calibrate`` probes read back from the
+    tuning cache for this backend+mesh). ``hbm_bandwidth`` and
+    ``dispatch_s`` are None in the default set: the models then price
+    HBM streams straight from the ``TPUSpec`` and carry no separate
+    dispatch term — exactly the pre-calibration arithmetic, so forcing
+    defaults reproduces the old decisions bit-for-bit.
+    """
+
+    page_lookup_s: float = PAGE_LOOKUP_S
+    chunk_dispatch_s: float = CHUNK_DISPATCH_S
+    prefix_hash_s: float = PREFIX_HASH_S
+    draft_token_s: float = NGRAM_DRAFT_S
+    dispatch_s: Optional[float] = None     # measured executable dispatch
+    hbm_bandwidth: Optional[float] = None  # None -> the TPUSpec's rate
+    source: str = "default"                # "default" | "calibrated"
+    backend: str = ""
+    mesh: str = ""
+    timestamp: float = 0.0
+
+    def apply_tpu(self, tpu: hwmodel.TPUSpec) -> hwmodel.TPUSpec:
+        """The spec the models should price HBM streams with: the
+        measured stream rate when calibrated, the assumed spec itself
+        otherwise (same object -> identical default math)."""
+        if self.hbm_bandwidth is None:
+            return tpu
+        return dataclasses.replace(tpu, hbm_bandwidth=self.hbm_bandwidth)
+
+
+DEFAULT_CONSTANTS = ServeConstants()
+
+# Probe targets, in report order. ``assumed_constants()`` maps each to
+# the hand-set value the drift ratio is taken against.
+CALIBRATED_NAMES = ("dispatch_s", "page_lookup_s", "hbm_bandwidth",
+                    "chunk_dispatch_s", "draft_token_s", "prefix_hash_s")
+
+
+def assumed_constants(tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU) -> dict:
+    """Hand-set value per calibrated constant (the drift baseline).
+    ``dispatch_s`` has no model term of its own; its baseline is the
+    chunk-dispatch constant, which prices the same enqueue+launch."""
+    return {"dispatch_s": CHUNK_DISPATCH_S,
+            "page_lookup_s": PAGE_LOOKUP_S,
+            "hbm_bandwidth": tpu.hbm_bandwidth,
+            "chunk_dispatch_s": CHUNK_DISPATCH_S,
+            "draft_token_s": NGRAM_DRAFT_S,
+            "prefix_hash_s": PREFIX_HASH_S}
+
+
+def _backend_key(backend: Optional[str] = None) -> str:
+    if backend is not None:
+        return backend
+    try:
+        import jax
+        return jax.default_backend()
+    except Exception:              # jax-less analytical use
+        return "cpu"
+
+
+def calibration_key(name: str, mesh_shape=None,
+                    backend: Optional[str] = None) -> str:
+    return (f"{CALIBRATED_PREFIX}{_backend_key(backend)}"
+            f":{_mesh_key(mesh_shape)}:{name}")
+
+
+def record_calibration(name: str, value: float, mesh_shape=None,
+                       backend: Optional[str] = None, **meta) -> None:
+    """Persist one probed constant under the ``calibrated:`` namespace."""
+    assert name in CALIBRATED_NAMES, name
+    value = float(value)
+    assert math.isfinite(value) and value > 0, (name, value)
+    entry = {"schema_version": CALIBRATION_SCHEMA_VERSION,
+             "value": value,
+             "backend": _backend_key(backend),
+             "mesh": _mesh_key(mesh_shape)}
+    entry.update(meta)
+    _store_tuning_cache(calibration_key(name, mesh_shape, backend), entry)
+
+
+def load_calibration(name: str, mesh_shape=None,
+                     backend: Optional[str] = None) -> Optional[dict]:
+    """One constant's validated cache entry, or None. A torn write, a
+    schema-version mismatch, or a non-finite value reads as None (that
+    constant falls back to its default), never an exception."""
+    hit = _load_tuning_cache().get(
+        calibration_key(name, mesh_shape, backend))
+    if not isinstance(hit, dict):
+        return None
+    try:
+        if int(hit["schema_version"]) != CALIBRATION_SCHEMA_VERSION:
+            return None
+        v = float(hit["value"])
+    except (KeyError, TypeError, ValueError):
+        return None
+    if not (math.isfinite(v) and v > 0):
+        return None
+    return hit
+
+
+def resolve_constants(mesh_shape=None,
+                      backend: Optional[str] = None) -> ServeConstants:
+    """The constants the serving engine prices its decisions with.
+
+    Prefers calibrated entries (``core.calibrate`` probes for this
+    backend+mesh) constant by constant; any constant without a valid
+    entry keeps its hand-set default. With ``REPRO_DEFAULT_CONSTANTS``
+    set — or no valid entries at all — this is exactly
+    ``DEFAULT_CONSTANTS``, the documented reproducible fallback.
+    """
+    if os.environ.get(DEFAULT_CONSTANTS_ENV, "").strip() not in ("", "0"):
+        return DEFAULT_CONSTANTS
+    found, ts = {}, 0.0
+    for name in CALIBRATED_NAMES:
+        hit = load_calibration(name, mesh_shape, backend)
+        if hit is not None:
+            found[name] = float(hit["value"])
+            try:
+                ts = max(ts, float(hit.get("timestamp", 0.0)))
+            except (TypeError, ValueError):
+                pass
+    if not found:
+        return DEFAULT_CONSTANTS
+    return dataclasses.replace(DEFAULT_CONSTANTS, source="calibrated",
+                               backend=_backend_key(backend),
+                               mesh=_mesh_key(mesh_shape),
+                               timestamp=ts, **found)
+
+
+def calibration_report(mesh_shape=None, backend: Optional[str] = None,
+                       tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU) -> dict:
+    """Per-constant measured-vs-assumed rollup (the calibration half of
+    the observability gate): for every probe target, the measured value
+    (None when never calibrated), the hand-set assumed value, the drift
+    ratio measured/assumed (0.0 sentinel when unmeasured), and the probe
+    metadata the entry carried (n_trials, spread, timestamp)."""
+    resolved = resolve_constants(mesh_shape, backend)
+    assumed = assumed_constants(tpu)
+    rows = {}
+    for name in CALIBRATED_NAMES:
+        hit = load_calibration(name, mesh_shape, backend)
+        measured = float(hit["value"]) if hit is not None else None
+        rows[name] = {
+            "assumed": assumed[name],
+            "measured": measured,
+            "drift_ratio": drift_ratio(measured, assumed[name])
+            if measured is not None else 0.0,
+            "n_trials": hit.get("n_trials") if hit else None,
+            "spread": hit.get("spread") if hit else None,
+            "timestamp": hit.get("timestamp") if hit else None,
+        }
+    return {"schema_version": CALIBRATION_SCHEMA_VERSION,
+            "source": resolved.source,
+            "backend": _backend_key(backend),
+            "mesh": _mesh_key(mesh_shape),
+            "timestamp": resolved.timestamp,
+            "constants": rows}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -473,8 +710,9 @@ def _tp_shard(tp: Optional["TPServe"], heads: int) -> Tuple[int, int]:
 def paged_decode_model(max_len: int, lengths: Iterable[int], n_heads: int,
                        n_kv_heads: int, head_dim: int, page_size: int,
                        in_bytes: int = 2,
-                       page_lookup_s: float = PAGE_LOOKUP_S,
+                       page_lookup_s: Optional[float] = None,
                        tp: Optional[TPServe] = None,
+                       constants: Optional[ServeConstants] = None,
                        tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU) -> dict:
     """Paged vs contiguous decode for one engine tick: same FLOPs, a
     page-table-lookup overhead term per visited K/V block, and an HBM
@@ -490,11 +728,20 @@ def paged_decode_model(max_len: int, lengths: Iterable[int], n_heads: int,
     divide the mesh) and both variants pay the per-tick activation
     collectives — paging and tensor parallelism compose, they don't
     interact, so the contig-vs-paged delta is unchanged.
+
+    ``constants`` (a ``ServeConstants``) supplies the lookup cost and —
+    when calibrated — the measured HBM stream rate; None is the
+    hand-set default set. An explicit ``page_lookup_s`` overrides.
     """
     # Deferred: keeps core free of a module-level serve/kernels dependency
     # (kernels.ops imports this module at its top level).
     from repro.kernels.flash_attention import _largest_divisor
     from repro.serve.paged import reservation
+
+    const = constants if constants is not None else DEFAULT_CONSTANTS
+    tpu = const.apply_tpu(tpu)
+    if page_lookup_s is None:
+        page_lookup_s = const.page_lookup_s
 
     group = max(1, n_heads // n_kv_heads)
     lengths = [int(l) for l in lengths]
@@ -534,22 +781,13 @@ def paged_decode_model(max_len: int, lengths: Iterable[int], n_heads: int,
     return out
 
 
-# Per-chunk dispatch overhead of the chunked-prefill executable: one host
-# enqueue + kernel launch per chunk (the fixed cost small chunks pay more
-# often — the MXU-efficiency side of the chunk-size trade).
-CHUNK_DISPATCH_S = 5e-6
-
-# Host-side cost of one prefix-index level: a blake2b digest over one
-# page of tokens plus a dict probe (``serve.paged.PrefixIndex``).
-PREFIX_HASH_S = 2e-6
-
-
 def prefill_chunk_model(prompt_len: int, chunk: int, n_heads: int,
                         n_kv_heads: int, head_dim: int, page_size: int,
                         in_bytes: int = 2,
-                        page_lookup_s: float = PAGE_LOOKUP_S,
+                        page_lookup_s: Optional[float] = None,
                         cached_rows: int = 0,
                         tp: Optional[TPServe] = None,
+                        constants: Optional[ServeConstants] = None,
                         tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU) -> dict:
     """Price chunked paged prefill of one ``prompt_len`` prompt at one
     chunk size: per-chunk causal attention over the previously-written
@@ -581,13 +819,18 @@ def prefill_chunk_model(prompt_len: int, chunk: int, n_heads: int,
     they divide the mesh and every chunk pays the activation collectives
     (a per-chunk fixed cost — one more term small chunks amortize badly).
     """
+    const = constants if constants is not None else DEFAULT_CONSTANTS
+    tpu = const.apply_tpu(tpu)
+    if page_lookup_s is None:
+        page_lookup_s = const.page_lookup_s
+    dispatch_s = const.chunk_dispatch_s
     _, attn_shard = _tp_shard(tp, n_heads)
     del n_kv_heads
     coll_per_chunk = _tp_collective_s(chunk, tp, in_bytes, tpu)
     # A full-coverage hit still re-prefills the last row (the first
     # token's logit must be sampled) — same clamp the engine applies.
     cached_rows = max(0, min(int(cached_rows), prompt_len - 1))
-    probe_s = _ceil_div(cached_rows, page_size) * PREFIX_HASH_S
+    probe_s = _ceil_div(cached_rows, page_size) * const.prefix_hash_s
     n_chunks = _ceil_div(prompt_len - cached_rows, chunk)
     attn_s, lookup_s, visited_total, worst_chunk_s = 0.0, 0.0, 0, 0.0
     for i in range(n_chunks):
@@ -603,14 +846,14 @@ def prefill_chunk_model(prompt_len: int, chunk: int, n_heads: int,
         t, terms = attn_cost(p, blk, tpu)
         t /= attn_shard
         visited = terms["visited_blocks"]
-        chunk_s = t + visited * page_lookup_s + CHUNK_DISPATCH_S \
+        chunk_s = t + visited * page_lookup_s + dispatch_s \
             + coll_per_chunk
         attn_s += t
         lookup_s += visited * page_lookup_s
         visited_total += visited
         worst_chunk_s = max(worst_chunk_s, chunk_s)
     collective_s = n_chunks * coll_per_chunk
-    total_s = attn_s + lookup_s + n_chunks * CHUNK_DISPATCH_S \
+    total_s = attn_s + lookup_s + n_chunks * dispatch_s \
         + collective_s + probe_s
     return {
         "chunk": chunk,
@@ -620,7 +863,7 @@ def prefill_chunk_model(prompt_len: int, chunk: int, n_heads: int,
         "prefill_s": total_s,
         "attn_s": attn_s,
         "lookup_s": lookup_s,
-        "dispatch_s": n_chunks * CHUNK_DISPATCH_S,
+        "dispatch_s": n_chunks * dispatch_s,
         "collective_s": collective_s,
         "visited_blocks": visited_total,
         "interleave_latency_s": worst_chunk_s,
@@ -632,6 +875,7 @@ def choose_prefill_chunk(max_len: int, n_heads: int, n_kv_heads: int,
                          head_dim: int, page_size: int,
                          latency_weight: float = 4.0,
                          in_bytes: int = 2,
+                         constants: Optional[ServeConstants] = None,
                          tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU
                          ) -> Tuple[int, dict]:
     """Pick the chunk size the serving engine prefills with.
@@ -657,7 +901,7 @@ def choose_prefill_chunk(max_len: int, n_heads: int, n_kv_heads: int,
     for cand in cands:
         terms = prefill_chunk_model(max_len, cand, n_heads, n_kv_heads,
                                     head_dim, page_size, in_bytes=in_bytes,
-                                    tpu=tpu)
+                                    constants=constants, tpu=tpu)
         score = terms["prefill_s"] \
             + latency_weight * terms["interleave_latency_s"]
         if score < best_score:
@@ -670,6 +914,7 @@ def choose_prefix_cache(prompt_len: int, prefix_rows: int, hit_rate: float,
                         n_heads: int, n_kv_heads: int, head_dim: int,
                         page_size: int, chunk: Optional[int] = None,
                         in_bytes: int = 2,
+                        constants: Optional[ServeConstants] = None,
                         tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU
                         ) -> Tuple[bool, dict]:
     """On/off policy for ``ServeConfig.prefix_cache``, priced by hit rate.
@@ -685,21 +930,25 @@ def choose_prefix_cache(prompt_len: int, prefix_rows: int, hit_rate: float,
     policy's real content: everything else is monotone in the hit rate.
     """
     assert 0.0 <= hit_rate <= 1.0, hit_rate
+    const = constants if constants is not None else DEFAULT_CONSTANTS
+    tpu = const.apply_tpu(tpu)
     prefix_rows = max(0, min(int(prefix_rows), int(prompt_len)))
     if chunk is None:
         chunk, _ = choose_prefill_chunk(prompt_len, n_heads, n_kv_heads,
                                         head_dim, page_size,
-                                        in_bytes=in_bytes, tpu=tpu)
+                                        in_bytes=in_bytes,
+                                        constants=const, tpu=tpu)
     full = prefill_chunk_model(prompt_len, chunk, n_heads, n_kv_heads,
                                head_dim, page_size, in_bytes=in_bytes,
-                               tpu=tpu)
+                               constants=const, tpu=tpu)
     hit = prefill_chunk_model(prompt_len, chunk, n_heads, n_kv_heads,
                               head_dim, page_size, in_bytes=in_bytes,
-                              cached_rows=prefix_rows, tpu=tpu)
+                              cached_rows=prefix_rows, constants=const,
+                              tpu=tpu)
     # One COW page split: read + write one page of K and V rows.
     cow_s = 4 * page_size * n_kv_heads * head_dim * in_bytes \
         / tpu.hbm_bandwidth
-    probe_s = _ceil_div(prompt_len, page_size) * PREFIX_HASH_S
+    probe_s = _ceil_div(prompt_len, page_size) * const.prefix_hash_s
     on_s = hit_rate * (hit["prefill_s"] + cow_s) \
         + (1.0 - hit_rate) * (full["prefill_s"] + probe_s)
     off_s = full["prefill_s"]
@@ -717,11 +966,6 @@ def choose_prefix_cache(prompt_len: int, prefix_rows: int, hit_rate: float,
     }
 
 
-# Host-side cost of one n-gram-lookup drafted token (a numpy scan of the
-# slot's history — no model, no HBM).
-NGRAM_DRAFT_S = 2e-6
-
-
 def expected_spec_tokens(k: int, accept_rate: float) -> float:
     """E[tokens emitted per verify tick] with per-draft accept probability
     ``accept_rate``: the accepted prefix length plus the always-emitted
@@ -733,11 +977,12 @@ def spec_decode_model(lengths: Iterable[int], n_heads: int,
                       n_kv_heads: int, head_dim: int, page_size: int,
                       k: int, accept_rate: float, param_bytes: float,
                       draft_bytes: float = 0.0,
-                      draft_token_s: float = NGRAM_DRAFT_S,
+                      draft_token_s: Optional[float] = None,
                       in_bytes: int = 2,
-                      page_lookup_s: float = PAGE_LOOKUP_S,
+                      page_lookup_s: Optional[float] = None,
                       plain_tick_s: Optional[float] = None,
                       tp: Optional[TPServe] = None,
+                      constants: Optional[ServeConstants] = None,
                       tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU) -> dict:
     """Price one speculative verify tick against ``k + 1`` plain decode
     ticks — the serving-side instance of the paper's latency-hiding
@@ -766,6 +1011,12 @@ def spec_decode_model(lengths: Iterable[int], n_heads: int,
     """
     from repro.kernels.flash_attention import _largest_divisor
 
+    const = constants if constants is not None else DEFAULT_CONSTANTS
+    tpu = const.apply_tpu(tpu)
+    if page_lookup_s is None:
+        page_lookup_s = const.page_lookup_s
+    if draft_token_s is None:
+        draft_token_s = const.draft_token_s
     group = max(1, n_heads // n_kv_heads)
     lengths = [int(l) for l in lengths]
     slots = len(lengths)
@@ -790,7 +1041,7 @@ def spec_decode_model(lengths: Iterable[int], n_heads: int,
                 / attn_shard
         dense = 2.0 * n_params * slots * width \
             / (dense_shard * tpu.peak_bf16_flops)
-        return weight_stream_s + attn + dense + CHUNK_DISPATCH_S \
+        return weight_stream_s + attn + dense + const.chunk_dispatch_s \
             + _tp_collective_s(slots * width, tp, in_bytes, tpu)
 
     # The width-1 tick is k-independent; choose_spec_k precomputes it
@@ -822,10 +1073,11 @@ def choose_spec_k(lengths: Iterable[int], n_heads: int,
                   n_kv_heads: int, head_dim: int, page_size: int,
                   accept_rate: float, param_bytes: float,
                   draft_bytes: float = 0.0,
-                  draft_token_s: float = NGRAM_DRAFT_S,
+                  draft_token_s: Optional[float] = None,
                   ks: Tuple[int, ...] = (1, 2, 3, 4, 6, 8),
                   in_bytes: int = 2,
                   tp: Optional[TPServe] = None,
+                  constants: Optional[ServeConstants] = None,
                   tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU
                   ) -> Tuple[int, dict]:
     """Pick the verify width the serving engine speculates with.
@@ -847,7 +1099,7 @@ def choose_spec_k(lengths: Iterable[int], n_heads: int,
                                   draft_token_s=draft_token_s,
                                   in_bytes=in_bytes,
                                   plain_tick_s=plain_tick_s, tp=tp,
-                                  tpu=tpu)
+                                  constants=constants, tpu=tpu)
         plain_tick_s = terms["plain_tick_s"]
         if best_terms is None or \
                 terms["tokens_per_s_spec"] > best_terms["tokens_per_s_spec"]:
@@ -899,7 +1151,8 @@ def tp_decode_model(lengths: Iterable[int], n_heads: int,
                     n_kv_heads: int, head_dim: int, page_size: int,
                     param_bytes: float, d_model: int, n_layers: int,
                     n_devices: int, in_bytes: int = 2,
-                    page_lookup_s: float = PAGE_LOOKUP_S,
+                    page_lookup_s: Optional[float] = None,
+                    constants: Optional[ServeConstants] = None,
                     tpu: hwmodel.TPUSpec = hwmodel.DEFAULT_TPU) -> dict:
     """Price one paged decode tick single-device vs tensor-parallel over
     ``n_devices`` — the serving-side instance of the paper's NVLink-era
@@ -920,7 +1173,8 @@ def tp_decode_model(lengths: Iterable[int], n_heads: int,
     common = dict(n_heads=n_heads, n_kv_heads=n_kv_heads,
                   head_dim=head_dim, page_size=page_size,
                   k=0, accept_rate=0.0, param_bytes=param_bytes,
-                  in_bytes=in_bytes, page_lookup_s=page_lookup_s, tpu=tpu)
+                  in_bytes=in_bytes, page_lookup_s=page_lookup_s,
+                  constants=constants, tpu=tpu)
     base = spec_decode_model(lengths, **common)
     shard = spec_decode_model(lengths, tp=tp, **common)
     tick_1, tick_tp = base["plain_tick_s"], shard["plain_tick_s"]

@@ -26,12 +26,14 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
 import numpy as np
 
 from repro import configs
+from repro.core import autotune
 from repro.launch import mesh as mesh_lib
 from repro.models import transformer as T
 from repro.serve import traffic
@@ -167,7 +169,15 @@ def main(argv=None):
     obs.add_argument("--no-telemetry", action="store_true",
                      help="disable the event ring and wall-clock spans "
                           "(decision counters stay exact either way)")
+    obs.add_argument("--default-constants", action="store_true",
+                     help="price choose_* decisions from the hand-set "
+                          "default constants, skipping any calibrated: "
+                          "cache entries (reproducibility escape hatch; "
+                          "see repro.launch.calibrate)")
     args = ap.parse_args(argv)
+
+    if args.default_constants:
+        os.environ[autotune.DEFAULT_CONSTANTS_ENV] = "1"
 
     if args.spec_k and not args.paged:
         raise SystemExit("--spec-k needs --paged (verify runs the paged "
@@ -278,6 +288,18 @@ def main(argv=None):
         toks = sum(len(v) for v in finished.values())
         print(f"served {len(finished)} requests, {toks} tokens "
               f"in {dt:.2f}s ({toks/dt:.1f} tok/s)")
+    # Which constant set priced this session's choose_* decisions —
+    # operators need to tell a stale calibration from a fresh one.
+    const = engine.constants
+    if const.source == "calibrated":
+        age_min = max(0.0, (time.time() - const.timestamp) / 60.0)
+        print(f"  constants: calibrated [{const.backend}:{const.mesh}] "
+              f"priced choose_* (measured {age_min:.0f} min ago, "
+              f"ts={const.timestamp:.0f}; --default-constants forces "
+              f"the hand-set defaults)")
+    else:
+        print("  constants: hand-set defaults priced choose_* (run "
+              "python -m repro.launch.calibrate to measure this backend)")
     if engine.pool is not None:
         occ = engine.pool.occupancy()
         mesh_note = (f" over {occ['n_devices']} devices"

@@ -290,6 +290,13 @@ class ServingEngine:
         self.cfg = cfg
         self.scfg = serve_cfg
         self.mesh = mesh
+        # The cost-constant set pricing every choose_* decision this
+        # engine makes: calibrated (core.calibrate probes for this
+        # backend+mesh, read from the tuning cache) when available,
+        # the documented defaults otherwise. REPRO_DEFAULT_CONSTANTS=1
+        # forces the defaults — the reproducibility escape hatch.
+        from repro.core import autotune as _autotune
+        self.constants = _autotune.resolve_constants(mesh_shape=mesh)
         # Distributed serving (``serve.dist``): weights tensor-parallel
         # under the serving ruleset, the page pool device-sharded over the
         # pool axis, the unembed GEMM routed through the overlapped
@@ -344,7 +351,8 @@ class ServingEngine:
                 from repro.core import autotune
                 chunk, _ = autotune.choose_prefill_chunk(
                     serve_cfg.max_len, cfg.n_heads, cfg.n_kv_heads,
-                    cfg.dhead, serve_cfg.page_size)
+                    cfg.dhead, serve_cfg.page_size,
+                    constants=self.constants)
             assert chunk % serve_cfg.page_size == 0 \
                 and 0 < chunk <= serve_cfg.max_len, \
                 (chunk, serve_cfg.page_size, serve_cfg.max_len)
@@ -1501,7 +1509,8 @@ class ServingEngine:
                 if self._adapt_proposed else 0.0)
         self.k_live, _ = spec_mod.rechoose_k(
             self.cfg, self.scfg.page_size,
-            [max(1, l) for l in self.context_lengths()], rate, self.spec_k)
+            [max(1, l) for l in self.context_lengths()], rate, self.spec_k,
+            constants=self.constants)
         self._adapt_ticks = 0
         self._adapt_proposed = 0
         self._adapt_accepted = 0

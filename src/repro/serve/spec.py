@@ -106,7 +106,8 @@ def longest_accept(drafts: Sequence[int],
 
 
 def rechoose_k(cfg: T.ModelConfig, page_size: int, lengths, accept_rate: float,
-               k_max: int, in_bytes: int = 4) -> Tuple[int, dict]:
+               k_max: int, in_bytes: int = 4,
+               constants=None) -> Tuple[int, dict]:
     """Feed a *measured* accept rate back into the spec cost model.
 
     ``choose_spec_k`` was built to be consulted offline with a guessed
@@ -123,7 +124,8 @@ def rechoose_k(cfg: T.ModelConfig, page_size: int, lengths, accept_rate: float,
     k, terms = autotune.choose_spec_k(
         [int(l) for l in lengths], cfg.n_heads, cfg.n_kv_heads, cfg.dhead,
         page_size, float(accept_rate), param_bytes,
-        ks=tuple(range(1, k_max + 1)), in_bytes=in_bytes)
+        ks=tuple(range(1, k_max + 1)), in_bytes=in_bytes,
+        constants=constants)
     return min(k, k_max), terms
 
 

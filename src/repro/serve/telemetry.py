@@ -303,21 +303,50 @@ class Telemetry:
         One track (tid) per engine phase (``phase:decode``, ...) carries
         the wall-clock spans as complete events (ph="X"); per-slot tracks
         (``slot:0``, ...) carry slot-attributed spans (prefill chunks)
-        and the decision events as instants (ph="i"). Timestamps are
-        microseconds relative to the telemetry epoch. Write with
-        ``json.dump`` and open at ui.perfetto.dev or chrome://tracing."""
+        and the decision events as instants (ph="i"). Counter tracks
+        (ph="C") reconstruct pool occupancy, queue depth, and the live
+        speculation width from the decision events, so calibration runs
+        and degradation-ladder transitions read off one timeline.
+        Timestamps are microseconds relative to the telemetry epoch.
+        Write with ``json.dump`` and open at ui.perfetto.dev or
+        chrome://tracing."""
         tev = []
         for name, t0, dur, tick, slot, comp in self.spans:
             tid = f"slot:{slot}" if slot is not None else f"phase:{name}"
             tev.append({"name": name, "ph": "X", "pid": 0, "tid": tid,
                         "ts": t0 * 1e6, "dur": dur * 1e6,
                         "args": {"tick": tick, "compile": comp}})
+        # Counter tracks, integrated from the decision events in ring
+        # order. The ring may have evicted the prefix of the run, so the
+        # integrals are clamped at zero — the *shape* (admission waves,
+        # preemption storms, k collapsing under degradation) is what the
+        # timeline is for; exact totals live in the aggregates.
+        pool = queue = 0
         for t, tick, kind, payload in self.events:
             slot = payload.get("slot")
             tid = f"slot:{slot}" if slot is not None else "phase:events"
             tev.append({"name": kind, "ph": "i", "s": "t", "pid": 0,
                         "tid": tid, "ts": t * 1e6,
                         "args": dict(payload, tick=tick)})
+            ts = t * 1e6
+            if kind in ("page_alloc", "page_free"):
+                pool += payload.get("n", 0) * (1 if kind == "page_alloc"
+                                               else -1)
+                pool = max(0, pool)
+                tev.append({"name": "pool_pages", "ph": "C", "pid": 0,
+                            "ts": ts, "args": {"pages": pool}})
+            elif kind in ("submit", "admit", "shed", "preempt"):
+                queue += 1 if kind in ("submit", "preempt") else -1
+                queue = max(0, queue)
+                tev.append({"name": "queue_depth", "ph": "C", "pid": 0,
+                            "ts": ts, "args": {"requests": queue}})
+            elif kind == "spec_verify":
+                tev.append({"name": "spec_k_live", "ph": "C", "pid": 0,
+                            "ts": ts,
+                            "args": {"k": payload.get("proposed", 0)}})
+            elif kind == "probe_tick":
+                tev.append({"name": "spec_k_live", "ph": "C", "pid": 0,
+                            "ts": ts, "args": {"k": 1}})
         return {"traceEvents": tev, "displayTimeUnit": "ms",
                 "otherData": {"schema_version": self.schema_version}}
 
@@ -343,10 +372,18 @@ def drift_report(engine, persist: bool = False) -> Dict[str, Any]:
         rate.
 
     Each component carries ``measured_s``, ``modeled_s`` and ``ratio``
-    (= measured/modeled, ``autotune.drift_ratio``). With ``persist=True``
-    the measurements are written into the persistent tuning cache under
-    the ``serve_measured:`` key namespace — the substrate the calibration
-    pass will read instead of the hand-set constants.
+    (= measured/modeled, ``autotune.drift_ratio``) — modeled under the
+    constant set the engine actually priced its decisions with
+    (``engine.constants``) — plus ``modeled_default_s``/``ratio_default``
+    under the hand-set defaults, so a calibrated run shows both how far
+    the model drifted and how much calibration closed the gap. The
+    report also embeds which set was active (``constants``) and the
+    per-constant measured-vs-assumed rollup
+    (``calibration`` = ``autotune.calibration_report``). With
+    ``persist=True`` the measurements are written into the persistent
+    tuning cache under the ``serve_measured:`` key namespace — the
+    substrate the calibration pass reads alongside the hand-set
+    constants.
     """
     from repro.core import autotune
     from repro.models import transformer as T
@@ -367,29 +404,43 @@ def drift_report(engine, persist: bool = False) -> Dict[str, Any]:
     out: Dict[str, Any] = {"schema_version": TRACE_SCHEMA_VERSION}
     geom = dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
                 head_dim=cfg.dhead, page_size=scfg.page_size)
+    const = getattr(engine, "constants", None)
+    if const is None:
+        const = autotune.resolve_constants(
+            mesh_shape=getattr(engine, "mesh", None))
+
+    def cell(measured, model_fn, **kw):
+        """measured vs the model priced under the engine's active
+        constant set (headline) and under the defaults (comparison)."""
+        modeled = model_fn(constants=const, **kw)
+        modeled_default = modeled if const.source == "default" \
+            else model_fn(constants=autotune.DEFAULT_CONSTANTS, **kw)
+        return {
+            "measured_s": measured, "modeled_s": modeled,
+            "ratio": autotune.drift_ratio(measured, modeled),
+            "modeled_default_s": modeled_default,
+            "ratio_default": autotune.drift_ratio(measured,
+                                                  modeled_default)}
 
     dec = stats.get("decode")
     if dec and dec["execute_n"]:
         mean_len, mean_slots = mean_geom(
             "decode_context_rows", "decode_slot_ticks", dec["n"])
-        modeled = autotune.paged_decode_model(
-            scfg.max_len, [mean_len] * mean_slots, **geom)["paged_s"]
-        measured = dec["execute_mean_s"]
-        out["decode"] = {
-            "measured_s": measured, "modeled_s": modeled,
-            "ratio": autotune.drift_ratio(measured, modeled),
-            "n_spans": dec["execute_n"], "mean_context": mean_len,
-            "mean_slots": mean_slots}
+        out["decode"] = dict(cell(
+            dec["execute_mean_s"],
+            lambda **kw: autotune.paged_decode_model(
+                scfg.max_len, [mean_len] * mean_slots, **geom,
+                **kw)["paged_s"]),
+            n_spans=dec["execute_n"], mean_context=mean_len,
+            mean_slots=mean_slots)
 
     pc = stats.get("prefill_chunk")
     if pc and pc["execute_n"]:
-        modeled = autotune.prefill_chunk_model(
-            engine.chunk, engine.chunk, **geom)["prefill_s"]
-        measured = pc["execute_mean_s"]
-        out["prefill_chunk"] = {
-            "measured_s": measured, "modeled_s": modeled,
-            "ratio": autotune.drift_ratio(measured, modeled),
-            "n_spans": pc["execute_n"], "chunk": engine.chunk}
+        out["prefill_chunk"] = dict(cell(
+            pc["execute_mean_s"],
+            lambda **kw: autotune.prefill_chunk_model(
+                engine.chunk, engine.chunk, **geom, **kw)["prefill_s"]),
+            n_spans=pc["execute_n"], chunk=engine.chunk)
 
     sv = stats.get("spec_verify")
     if sv and sv["execute_n"] and engine.spec_k:
@@ -397,16 +448,21 @@ def drift_report(engine, persist: bool = False) -> Dict[str, Any]:
             "verify_context_rows", "verify_slot_ticks", sv["n"])
         proposed = c.get("spec_proposed", 0)
         rate = c.get("spec_accepted", 0) / proposed if proposed else 0.0
-        modeled = autotune.spec_decode_model(
-            [mean_len] * mean_slots, k=engine.spec_k, accept_rate=rate,
-            param_bytes=T.active_param_count(cfg) * 2.0,
-            **geom)["spec_tick_s"]
-        measured = sv["execute_mean_s"]
-        out["spec_verify"] = {
-            "measured_s": measured, "modeled_s": modeled,
-            "ratio": autotune.drift_ratio(measured, modeled),
-            "n_spans": sv["execute_n"], "spec_k": engine.spec_k,
-            "accept_rate": rate}
+        out["spec_verify"] = dict(cell(
+            sv["execute_mean_s"],
+            lambda **kw: autotune.spec_decode_model(
+                [mean_len] * mean_slots, k=engine.spec_k,
+                accept_rate=rate,
+                param_bytes=T.active_param_count(cfg) * 2.0,
+                **geom, **kw)["spec_tick_s"]),
+            n_spans=sv["execute_n"], spec_k=engine.spec_k,
+            accept_rate=rate)
+
+    out["constants"] = {"source": const.source, "backend": const.backend,
+                        "mesh": const.mesh,
+                        "timestamp": const.timestamp}
+    out["calibration"] = autotune.calibration_report(
+        mesh_shape=getattr(engine, "mesh", None))
 
     if persist:
         ident = (f"{cfg.n_heads}h{cfg.n_kv_heads}kv{cfg.dhead}d"

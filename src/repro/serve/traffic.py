@@ -27,7 +27,15 @@ Pieces:
     control, because a burst arrives faster than any steady rate.
   * ``run_open_loop`` — the open-loop driver: submit every request whose
     arrival time has passed, then tick once, repeat; the engine never
-    gates the generator.
+    gates the generator. ``record_to=`` writes the offered trace in the
+    recorded-log format before driving it.
+  * ``write_log`` / ``replay_log`` — the recorded production log format
+    (JSONL, one line per request: ``arrival_s``, ``class``,
+    ``prompt_len``, ``max_new``, ``session_id``) and its replayer, which
+    re-synthesizes deterministic prompts at the recorded lengths —
+    arrivals sharing a ``session_id`` share their opening tokens, so a
+    replayed log exercises the same prefix-cache behavior the live
+    traffic did.
   * ``summarize`` — the operator-facing rollup: TTFT/TPOT percentiles
     (tick domain), goodput, shed/preemption accounting, per-class SLO
     attainment.
@@ -42,6 +50,7 @@ the committed bench cells be schema-gated with hard inequalities.
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -131,13 +140,17 @@ class TrafficConfig:
 
 @dataclasses.dataclass(frozen=True)
 class Arrival:
-    """One offered request: what to submit and when."""
+    """One offered request: what to submit and when. ``session_id``
+    marks a returning user (session-mode classes): arrivals with the
+    same id share their prompt head, and the recorded-log format
+    carries the id so a replay regenerates the same sharing shape."""
 
     tick: int                         # arrival time (engine ticks)
     rid: int
     rclass: str
     prompt: np.ndarray
     max_new: int
+    session_id: Optional[int] = None
 
 
 class TrafficGenerator:
@@ -191,6 +204,7 @@ class TrafficGenerator:
                 plen = min(plen, cfg.max_prompt)
             prompt = self.rng.integers(2, cfg.vocab, size=(plen,),
                                        dtype=np.int64).astype(np.int32)
+            sid: Optional[int] = None
             if cls.sessions:
                 # A returning user: this session's shared opening tokens
                 # ahead of the per-arrival suffix (clamped prefix-first —
@@ -202,13 +216,80 @@ class TrafficGenerator:
                     prompt = prompt[:cfg.max_prompt]
             out.append(Arrival(
                 tick=int(t), rid=rid0 + n, rclass=cls.name, prompt=prompt,
-                max_new=self._log_uniform(cls.out_lo, cls.out_hi)))
+                max_new=self._log_uniform(cls.out_lo, cls.out_hi),
+                session_id=sid))
         return out
+
+
+# ----------------------------------------------------------------------------
+# Recorded-log format: write a trace out, replay it back
+# ----------------------------------------------------------------------------
+
+LOG_SCHEMA_VERSION = 1
+
+
+def write_log(path: str, arrivals: List[Arrival]) -> None:
+    """Write the offered trace as a recorded production log: JSONL, one
+    line per request with ``arrival_s`` (the tick-domain arrival time),
+    ``class``, ``prompt_len``, ``max_new``, ``session_id``. Token
+    *content* is deliberately not recorded — production logs don't ship
+    user text; ``replay_log`` re-synthesizes deterministic tokens at the
+    recorded lengths and session-sharing shape."""
+    with open(path, "w") as f:
+        for a in arrivals:
+            f.write(json.dumps({
+                "arrival_s": float(a.tick),
+                "class": a.rclass,
+                "prompt_len": int(len(a.prompt)),
+                "max_new": int(a.max_new),
+                "session_id": a.session_id,
+            }) + "\n")
+
+
+def replay_log(path: str, vocab: int = 128, seed: int = 0,
+               rid0: int = 0, prefix_len: int = 0) -> List[Arrival]:
+    """Rebuild a submittable arrival list from a recorded log.
+
+    Prompts are synthesized deterministically from ``seed`` at each
+    line's recorded length: lines carrying the same ``session_id`` get
+    the same ``prefix_len``-token head (drawn from a per-session seeded
+    stream, mirroring the generator's separate session stream), so a
+    replayed log re-offers the prefix-sharing the live traffic had —
+    the property prefix-cache and calibration runs care about. Replay
+    of a replayed log's own recording is bit-identical (round-trip)."""
+    rng = np.random.default_rng([seed, 0x10C])
+    heads: Dict[int, np.ndarray] = {}
+    out: List[Arrival] = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            plen = int(rec["prompt_len"])
+            sid = rec.get("session_id")
+            prompt = rng.integers(2, vocab, size=(plen,),
+                                  dtype=np.int64).astype(np.int32)
+            if sid is not None and prefix_len > 0:
+                if sid not in heads:
+                    heads[sid] = np.random.default_rng(
+                        [seed, 0x5E55, int(sid)]).integers(
+                        2, vocab, size=(prefix_len,),
+                        dtype=np.int64).astype(np.int32)
+                head = heads[sid][:plen]
+                prompt = np.concatenate([head, prompt[len(head):]])
+            out.append(Arrival(
+                tick=int(rec["arrival_s"]), rid=rid0 + i,
+                rclass=str(rec["class"]), prompt=prompt,
+                max_new=int(rec["max_new"]),
+                session_id=None if sid is None else int(sid)))
+    return out
 
 
 def run_open_loop(engine, arrivals: List[Arrival],
                   max_ticks: int = 20000,
-                  injector=None) -> Dict[str, dict]:
+                  injector=None,
+                  record_to: Optional[str] = None) -> Dict[str, dict]:
     """Drive ``engine`` open-loop: each iteration submits every arrival
     whose time has passed (the generator's clock, not the engine's
     readiness), then ticks once. Runs until every offered request has a
@@ -216,8 +297,13 @@ def run_open_loop(engine, arrivals: List[Arrival],
     the caller asserts on the shortfall, because a request with no
     outcome after the drain window IS the hang the robustness invariant
     forbids. ``injector`` (``serve.faults.FaultInjector``) is stepped
-    before each tick so fault schedules share the tick clock."""
+    before each tick so fault schedules share the tick clock.
+    ``record_to`` writes the *offered* trace (submission order) in the
+    recorded-log format before driving it — what ``replay_log`` reads
+    back."""
     pending = sorted(arrivals, key=lambda a: (a.tick, a.rid))
+    if record_to is not None:
+        write_log(record_to, pending)
     offered = {a.rid for a in pending}
     j = 0
     for _ in range(max_ticks):

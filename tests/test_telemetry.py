@@ -264,11 +264,18 @@ def test_chrome_trace_is_valid_json_with_tracks(model):
     phases = {e["tid"] for e in evs if e["ph"] == "X"}
     assert "phase:decode" in phases
     assert any(t.startswith("slot:") for t in phases)   # prefill chunks
+    # Counter tracks ride along as ph="C" events: pool occupancy and
+    # queue depth are always emitted on a paged overload run.
+    counters = {e["name"] for e in evs if e["ph"] == "C"}
+    assert {"pool_pages", "queue_depth"} <= counters
     for e in evs:
-        assert e["ph"] in ("X", "i")
+        assert e["ph"] in ("X", "i", "C")
         assert isinstance(e["ts"], float)
         if e["ph"] == "X":
             assert e["dur"] >= 0.0
+        if e["ph"] == "C":
+            (val,) = e["args"].values()   # one series per counter event
+            assert isinstance(val, int) and val >= 0
 
 
 def test_metrics_flat_and_summary_wall_clock(model):

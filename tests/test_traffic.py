@@ -135,6 +135,66 @@ def test_lengths_and_classes_respect_the_mix():
 
 
 # ----------------------------------------------------------------------------
+# Recorded-log format: JSONL round trip, session heads, record_to
+# ----------------------------------------------------------------------------
+
+def test_recorded_log_round_trips(tmp_path):
+    """write_log -> replay_log -> write_log must be a fixed point: the
+    replayed arrivals carry the same shape metadata (ticks, classes,
+    lengths, budgets, session ids), same-session replays share their
+    prompt heads, and re-recording the replay is bit-identical JSONL —
+    so a recorded incident trace replays deterministically forever."""
+    cls = (traffic.TrafficClass("chat", prompt_lo=4, prompt_hi=24,
+                                out_lo=2, out_hi=6,
+                                sessions=3, prefix_len=8),
+           traffic.TrafficClass("batch", prompt_lo=8, prompt_hi=16,
+                                out_lo=2, out_hi=4))
+    arrivals = traffic.TrafficGenerator(
+        _tcfg(n_requests=30, classes=cls)).arrivals()
+    p1 = str(tmp_path / "trace.jsonl")
+    traffic.write_log(p1, arrivals)
+    replayed = traffic.replay_log(p1, vocab=128, seed=5, prefix_len=8)
+    assert len(replayed) == len(arrivals)
+    for a, b in zip(arrivals, replayed):
+        assert (a.tick, a.rclass, len(a.prompt), a.max_new,
+                a.session_id) == \
+            (b.tick, b.rclass, len(b.prompt), b.max_new, b.session_id)
+    # Same-session replays share the synthesized prefix head (the log
+    # records no token content, only session identity).
+    by_sid = {}
+    for b in replayed:
+        if b.session_id is not None:
+            by_sid.setdefault(b.session_id, []).append(b)
+    multi = [v for v in by_sid.values() if len(v) >= 2]
+    assert multi, "no session produced two arrivals; widen the config"
+    for grp in multi:
+        for b in grp[1:]:
+            np.testing.assert_array_equal(b.prompt[:8], grp[0].prompt[:8])
+    # Fixed point: recording the replay reproduces the file bit-for-bit,
+    # and replaying that file reproduces the prompts bit-for-bit.
+    p2 = str(tmp_path / "trace2.jsonl")
+    traffic.write_log(p2, replayed)
+    assert open(p1).read() == open(p2).read()
+    again = traffic.replay_log(p2, vocab=128, seed=5, prefix_len=8)
+    for b, c in zip(replayed, again):
+        np.testing.assert_array_equal(b.prompt, c.prompt)
+
+
+def test_run_open_loop_record_to_captures_the_offered_trace(model,
+                                                            tmp_path):
+    cfg, params = model
+    eng = ServingEngine(params, cfg, _scfg())
+    arr = traffic.TrafficGenerator(_tcfg(n_requests=8)).arrivals()
+    p_rec = str(tmp_path / "rec.jsonl")
+    p_ref = str(tmp_path / "ref.jsonl")
+    res = traffic.run_open_loop(eng, arr, max_ticks=2000,
+                                record_to=p_rec)
+    assert res["unresolved"] == []
+    traffic.write_log(p_ref, arr)     # generator output is tick-sorted
+    assert open(p_rec).read() == open(p_ref).read()
+
+
+# ----------------------------------------------------------------------------
 # Engine under offered load: shed accounting, buckets, priority
 # ----------------------------------------------------------------------------
 
